@@ -1,0 +1,36 @@
+"""Paper Fig. 4: training-stage combinations (I/II/III) on LLAMA-LAYER."""
+from __future__ import annotations
+
+from common import budget, emit, eval_mean_std, trainer_kwargs
+
+from repro.core.devices import p100_box
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import llama_layer
+
+COMBOS = ("III", "II+III", "I+II+III", "I+III")
+
+
+def main():
+    g = llama_layer()
+    dev = p100_box(4)
+    sim = WCSimulator(g, dev, noise_sigma=0.03)
+    real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+    n1 = budget(15, 200)
+    n2 = budget(150, 4000)
+    n3 = budget(60, 2000)
+    for combo in COMBOS:
+        tr = DopplerTrainer(g, dev, seed=0, total_episodes=n1 + n2 + n3,
+                            **trainer_kwargs())
+        if "I" in combo.replace("III", "").replace("II", ""):
+            tr.stage1_imitation(n1)
+        if "II" in combo.replace("III", ""):
+            tr.stage2_sim(n2, sim)
+        tr.stage3_system(n3, lambda a: real.exec_time(a, seed=tr.episode))
+        mean, std = eval_mean_std(real, tr.best_assignment)
+        emit(f"fig4/llama_layer/{combo}", mean * 1e6,
+             f"ms={mean*1e3:.1f}+-{std*1e3:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 6: inference time + policy-update time vs graph size, for
+DOPPLER (MP once/episode), PLACETO-style (MP every step), and GDP."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+
+from repro.core.assign import build_graph_data, rollout
+from repro.core.devices import p100_box
+from repro.core.gdp import GDPTrainer
+from repro.core.placeto import PlacetoTrainer
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import synthetic_layered
+
+SIZES = (50, 100, 200, 400, 800)
+
+
+def main():
+    dev = p100_box(4)
+    for n_target in SIZES:
+        g = synthetic_layered(n_layers=max(2, n_target // 8 - 1), width=8)
+        sim = WCSimulator(g, dev)
+        n = g.n
+
+        dop = DopplerTrainer(g, dev, seed=0, total_episodes=100)
+        a, _ = dop.sample_assignment()            # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            dop.sample_assignment()
+        t_inf = (time.perf_counter() - t0) / 5
+        t0 = time.perf_counter()
+        for _ in range(3):
+            dop._rl_episode(lambda x: sim.exec_time(x), "bench")
+        t_upd = (time.perf_counter() - t0) / 3
+        emit(f"fig6/doppler/n{n}/inference", t_inf * 1e6, f"nodes={n}")
+        emit(f"fig6/doppler/n{n}/update", t_upd * 1e6, f"nodes={n}")
+
+        gdp = GDPTrainer(g, dev, seed=0, total_episodes=100)
+        gdp.train(1, sim)                          # compile
+        t0 = time.perf_counter()
+        gdp.train(3, sim)
+        emit(f"fig6/gdp/n{n}/update",
+             (time.perf_counter() - t0) / 3 * 1e6, f"nodes={n}")
+
+        if n <= 200:                               # per-step MP is O(n) GNNs
+            pl = PlacetoTrainer(g, dev, seed=0, total_episodes=100)
+            pl.train(1, sim)
+            t0 = time.perf_counter()
+            pl.train(2, sim)
+            emit(f"fig6/placeto_mp_per_step/n{n}/update",
+                 (time.perf_counter() - t0) / 2 * 1e6, f"nodes={n}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper App. G.1: simulator fidelity — correlation between the digital
+twin's ExecTime and the real WC executor's wall-clock over a spread of
+assignments.  (On this 1-core host the executor's parallelism is
+serialized, so correlations are reported for what they are.)"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import budget, emit
+
+from repro.core.devices import uniform_box
+from repro.core.executor import WCExecutor
+from repro.core.heuristics import (critical_path_assignment,
+                                   random_assignment,
+                                   round_robin_assignment)
+from repro.core.simulator import WCSimulator
+from repro.graphs.workloads import ffnn
+
+
+def _rank(x):
+    return np.argsort(np.argsort(x))
+
+
+def main():
+    # On a 1-core host, "devices" share the core: compute time is
+    # assignment-INVARIANT (serialized), so the assignment-sensitive term
+    # the twin can be validated against is the transfer volume.  Configure
+    # both engines transfer-dominated; the digital twin should then rank
+    # assignments like the real executor does.
+    g = ffnn(batch_log2=10, hidden_log2=11, grid=2)   # small enough for CPU
+    nd = 2
+    dev = uniform_box(nd, flops=50e9, bw=2e8)         # transfer-bound twin
+    sim = WCSimulator(g, dev)
+    ex = WCExecutor(g, devices=None, flops_scale=1e-4, bytes_scale=3e-3,
+                    n_virtual=nd)
+
+    assigns = [np.zeros(g.n, dtype=int),
+               round_robin_assignment(g, nd),
+               critical_path_assignment(g, dev)]
+    for s in range(budget(5, 30)):
+        assigns.append(random_assignment(g, nd, seed=s))
+    sim_t, real_t = [], []
+    for a in assigns:
+        a = np.asarray(a) % nd
+        sim_t.append(sim.exec_time(a))
+        real_t.append(ex.exec_time(a, n_warmup=1, n_runs=3))
+    sim_t, real_t = np.array(sim_t), np.array(real_t)
+    pearson = float(np.corrcoef(sim_t, real_t)[0, 1])
+    spearman = float(np.corrcoef(_rank(sim_t), _rank(real_t))[0, 1])
+    emit("g1/sim_vs_real/pearson", 0.0, f"r={pearson:.3f}")
+    emit("g1/sim_vs_real/spearman", 0.0, f"rho={spearman:.3f}")
+    emit("g1/sim_vs_real/n_assignments", float(len(assigns)),
+         f"paper_pearson=0.79;paper_spearman=0.69")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from
+results/dryrun/*.json.  Usage:
+  PYTHONPATH=src python benchmarks/report.py > results/roofline_tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.registry import ARCH_IDS, SHAPES  # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(arch, shape, mesh, tag=""):
+    f = RESULTS / f"{arch}__{shape}__{mesh}{tag}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def roofline_table(mesh: str):
+    print(f"\n### Roofline — mesh {mesh} "
+          f"({'512' if mesh == 'multipod' else '256'} chips, v5e)\n")
+    print("| arch | shape | t_compute (ms) | t_memory (ms) | "
+          "t_collective (ms) | dominant | MODEL_FLOPS/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = load(arch, shape, mesh)
+            if r is None:
+                print(f"| {arch} | {shape} | - | - | - | MISSING | - | - |")
+                continue
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | SKIP (full attn "
+                      f"@500k) | — | — |")
+                continue
+            rf = r["roofline"]
+            print(f"| {arch} | {shape} | {fmt_ms(rf['t_compute'])} | "
+                  f"{fmt_ms(rf['t_memory'])} | {fmt_ms(rf['t_collective'])} "
+                  f"| {rf['dominant']} | {r['useful_flops_fraction']:.3f} | "
+                  f"{r['roofline_fraction']:.4f} |")
+
+
+def dryrun_table():
+    print("\n### Dry-run artifacts (per-device, from compiled HLO)\n")
+    print("| arch | shape | mesh | HLO GFLOPs | HLO GB moved | "
+          "coll GB | AG/AR/RS/A2A/CP counts | temp bytes/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("pod", "multipod"):
+                r = load(arch, shape, mesh)
+                if r is None or r.get("skipped"):
+                    continue
+                c = r["collective_counts"]
+                cnt = "/".join(str(int(c.get(k, 0))) for k in
+                               ("all-gather", "all-reduce",
+                                "reduce-scatter", "all-to-all",
+                                "collective-permute"))
+                mem = r.get("memory_analysis", {})
+                print(f"| {arch} | {shape} | {r['mesh']} | "
+                      f"{r['hlo_flops_per_device']/1e9:.0f} | "
+                      f"{r['hlo_bytes_per_device']/1e9:.1f} | "
+                      f"{r['collective_bytes_per_device']/1e9:.2f} | {cnt} |"
+                      f" {mem.get('temp_size_in_bytes', 0)/1e9:.2f}e9 | "
+                      f"{r.get('compile_seconds', 0):.0f} |")
+
+
+def perf_compare(arch, shape, tags):
+    print(f"\n#### {arch} x {shape} — iteration ladder\n")
+    print("| variant | t_compute | t_memory | t_collective | dominant | "
+          "roofline frac |")
+    print("|---|---|---|---|---|---|")
+    for tag, label in tags:
+        r = load(arch, shape, "pod", tag)
+        if r is None:
+            print(f"| {label} | - | - | - | missing | - |")
+            continue
+        rf = r["roofline"]
+        print(f"| {label} | {fmt_ms(rf['t_compute'])} | "
+              f"{fmt_ms(rf['t_memory'])} | {fmt_ms(rf['t_collective'])} | "
+              f"{rf['dominant']} | {r['roofline_fraction']:.4f} |")
+
+
+def main():
+    dryrun_table()
+    for mesh in ("pod", "multipod"):
+        roofline_table(mesh)
+
+
+if __name__ == "__main__":
+    main()

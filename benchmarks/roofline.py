@@ -1,0 +1,75 @@
+"""Roofline table generator: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) roofline
+terms for EXPERIMENTS.md §Roofline.
+
+Decode cells get an additional `serve_bound` metric: the ideal HBM time
+to stream params + KV/state once (what a perfectly-fused decode step
+costs) vs the modeled memory term — model-FLOPs fractions are meaningless
+for single-token steps.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from common import emit  # noqa: E402
+
+from repro.configs.registry import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import HW_V5E  # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def decode_ideal_seconds(arch: str, shape: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    param_bytes = cfg.n_params() * 2                    # bf16 stream
+    kv = 0.0
+    for kind in cfg.pattern_for_depth():
+        if kind in ("attn", "attn_shared"):
+            kv += (2 * cell.seq_len * cfg.kv_dim * 2 * cell.global_batch)
+        elif cfg.ssm is not None:
+            di = cfg.ssm.expand * cfg.d_model
+            kv += (di * cfg.ssm.state_dim * 4 * cell.global_batch)
+    return (param_bytes + kv) / n_chips / HW_V5E["hbm_bw"]
+
+
+def load_rows():
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        r["_file"] = f.name
+        rows.append(r)
+    return rows
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        print("no dryrun results; run: python -m repro.launch.dryrun --all")
+        return
+    for r in rows:
+        cellname = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("skipped"):
+            emit(f"roofline/{cellname}", 0.0, "SKIP:" + r["reason"][:60])
+            continue
+        rf = r["roofline"]
+        extra = ""
+        if r["kind"] == "decode":
+            ideal = decode_ideal_seconds(r["arch"], r["shape"],
+                                         r["n_chips"])
+            extra = (f";serve_ideal_ms={ideal*1e3:.2f}"
+                     f";serve_frac={ideal/max(rf['t_memory'],1e-12):.3f}")
+        emit(f"roofline/{cellname}", rf["bound_s"] * 1e6,
+             f"dom={rf['dominant']};tc={rf['t_compute']*1e3:.1f}ms"
+             f";tm={rf['t_memory']*1e3:.1f}ms"
+             f";tcoll={rf['t_collective']*1e3:.1f}ms"
+             f";frac={r['roofline_fraction']:.4f}"
+             f";useful={r['useful_flops_fraction']:.3f}" + extra)
+
+
+if __name__ == "__main__":
+    main()

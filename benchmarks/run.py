@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default budgets are
+CPU-reduced; set REPRO_FULL=1 for the paper's episode counts.
+Select subsets: python -m benchmarks.run table1 table2 ...
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+MODULES = [
+    ("table1", "table1_wc_vs_sync"),
+    ("table2", "table2_methods"),
+    ("table3", "table3_ablation"),
+    ("table4", "table4_transfer"),
+    ("fig4", "fig4_stages"),
+    ("fig6", "fig6_scalability"),
+    ("table6", "table6_mp_ablation"),
+    ("table9", "table9_hardware"),
+    ("g1", "g1_sim_fidelity"),
+    ("roofline", "roofline"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    failures = []
+    for tag, mod_name in MODULES:
+        if want and tag not in want:
+            continue
+        t0 = time.time()
+        print(f"# === {tag} ({mod_name}) ===", flush=True)
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+            print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:
+            failures.append(tag)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        raise SystemExit(1)
+    print("# all benchmarks done")
+
+
+if __name__ == "__main__":
+    main()

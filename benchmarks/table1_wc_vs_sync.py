@@ -1,0 +1,27 @@
+"""Paper Table 1: work-conserving vs bulk-synchronous execution of the
+same assignment (CHAINMM + FFNN)."""
+from __future__ import annotations
+
+from common import emit
+
+from repro.core.devices import p100_box
+from repro.core.heuristics import best_critical_path
+from repro.core.simulator import WCSimulator, synchronous_exec_time
+from repro.graphs.workloads import WORKLOADS
+
+
+def main():
+    dev = p100_box(4)
+    for name in ("chainmm", "ffnn"):
+        g = WORKLOADS[name]()
+        sim = WCSimulator(g, dev)
+        a, _ = best_critical_path(g, dev, sim.exec_time, n_trials=20)
+        wc = sim.exec_time(a)
+        sync = synchronous_exec_time(g, dev, a)
+        emit(f"table1/{name}/wc", wc * 1e6, f"ms={wc*1e3:.1f}")
+        emit(f"table1/{name}/sync", sync * 1e6,
+             f"ms={sync*1e3:.1f};speedup={sync/wc:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

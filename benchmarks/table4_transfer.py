@@ -1,0 +1,69 @@
+"""Paper Table 4 + App. J: few-shot transfer.
+
+(1) graph transfer: policy trained on FFNN/CHAINMM -> LLAMA-BLOCK with
+0/2k/4k-shot fine-tuning (reduced budgets on CPU);
+(2) hardware transfer: 4-GPU full-NVLink -> 8-GPU two-group box, with
+App.-J-style transfer-locality accounting."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import budget, emit, eval_mean_std, trainer_kwargs
+
+from repro.core.devices import p100_box, v100_two_groups
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer, transfer
+from repro.graphs.workloads import WORKLOADS
+
+
+def main():
+    dev = p100_box(4)
+    n_src = budget(200, 4000)
+    k_shots = [0, budget(60, 2000), budget(120, 4000)]
+    for src_name in ("ffnn", "chainmm"):
+        src_g = WORKLOADS[src_name]()
+        src_sim = WCSimulator(src_g, dev, noise_sigma=0.03)
+        src_tr = DopplerTrainer(src_g, dev, seed=0, total_episodes=n_src,
+                               **trainer_kwargs())
+        src_tr.stage1_imitation(budget(60, 200))
+        src_tr.stage2_sim(n_src, src_sim)
+
+        tgt_g = WORKLOADS["llama_block"]()
+        tgt_sim = WCSimulator(tgt_g, dev, noise_sigma=0.03)
+        prev_shots = 0
+        tr = transfer(src_tr, tgt_g, dev, seed=1,
+                      total_episodes=max(k_shots) + 1, **trainer_kwargs())
+        for k in k_shots:
+            tr.stage2_sim(k - prev_shots, tgt_sim)
+            prev_shots = k
+            a = tr.best_assignment if k else tr.greedy_assignment()
+            mean, std = eval_mean_std(tgt_sim, a)
+            emit(f"table4/{src_name}->llama_block/{k}shot", mean * 1e6,
+                 f"ms={mean*1e3:.1f}+-{std*1e3:.1f}")
+
+    # hardware transfer (App. J): 4 fully-linked -> 8 in two NVLink groups
+    g = WORKLOADS["ffnn"]()
+    tr4 = DopplerTrainer(g, dev, seed=2, total_episodes=n_src,
+                         **trainer_kwargs())
+    tr4.stage2_sim(n_src, WCSimulator(g, dev, noise_sigma=0.03))
+    dev8 = v100_two_groups()
+    groups = [0] * 4 + [1] * 4
+    sim8 = WCSimulator(g, dev8, noise_sigma=0.03, group_of=groups)
+    tr8 = transfer(tr4, g, dev8, seed=3, total_episodes=budget(80, 2000),
+                   **trainer_kwargs())
+    for k, tag in ((0, "zero_shot"), (budget(80, 2000), "2k_shot")):
+        if k:
+            tr8.stage2_sim(k, sim8)
+        a = tr8.best_assignment if k else tr8.greedy_assignment()
+        res = sim8.run(a)
+        tot = max(sum(res.transfer_class_counts.values()), 1)
+        pct = {c: 100.0 * v / tot
+               for c, v in res.transfer_class_counts.items()}
+        emit(f"table4/hw_4p100->8v100/{tag}", res.makespan * 1e6,
+             f"ms={res.makespan*1e3:.1f};same_dev={pct['same_device']:.1f}%"
+             f";same_group={pct['same_group']:.1f}%"
+             f";across={pct['across_groups']:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 6 / §4.3: message passing once-per-episode vs per-step.
+
+Quality: DOPPLER (MP/episode) vs the per-step-MP policy family (the
+PLACETO-style trainer re-encodes the graph at every MDP step, which is
+exactly the cost structure §4.3 avoids).  Cost: measured wall time per
+episode and the message-passing-round count, like the paper's Table 6."""
+from __future__ import annotations
+
+import time
+
+from common import budget, emit, trainer_kwargs
+
+from repro.core.devices import p100_box
+from repro.core.placeto import PlacetoTrainer
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import chainmm
+
+
+def main():
+    g = chainmm()
+    dev = p100_box(4)
+    sim = WCSimulator(g, dev, noise_sigma=0.03)
+    n = budget(100, 4000)
+
+    dop = DopplerTrainer(g, dev, seed=0, total_episodes=n)
+    dop.stage2_sim(3, sim)                 # compile
+    t0 = time.perf_counter()
+    dop.stage2_sim(n, sim)
+    t_ep = (time.perf_counter() - t0) / n
+    emit("table6/mp_per_episode/episode_time", t_ep * 1e6,
+         f"mp_rounds_per_episode=1;best_ms={dop.best_time*1e3:.1f}")
+
+    per_step = PlacetoTrainer(g, dev, seed=0, total_episodes=n)
+    per_step.train(2, sim)                 # compile
+    t0 = time.perf_counter()
+    per_step.train(max(n // 4, 10), sim)
+    t_ep2 = (time.perf_counter() - t0) / max(n // 4, 10)
+    emit("table6/mp_per_step/episode_time", t_ep2 * 1e6,
+         f"mp_rounds_per_episode={g.n};best_ms="
+         f"{per_step.best_time*1e3:.1f};extra_mp="
+         f"{(g.n-1)*100:.0f}%;slowdown={t_ep2/t_ep:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Tables 8/9 + DESIGN.md TPU adaptation: hardware variants.
+
+8x V100 in two NVLink groups (Table 9) and the TPU v5e 4x4 torus preset —
+DOPPLER vs CRITICAL PATH vs EnumOpt on each."""
+from __future__ import annotations
+
+from common import budget, emit, eval_mean_std, trainer_kwargs
+
+from repro.core.devices import tpu_v5e_slice, v100_two_groups
+from repro.core.enumopt import enumerative_assignment
+from repro.core.heuristics import best_critical_path
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import WORKLOADS
+
+BOXES = {
+    "v100x8_2groups": (v100_two_groups, [0] * 4 + [1] * 4),
+    "tpu_v5e_4x4": (lambda: tpu_v5e_slice(4, 4),
+                    [i // 4 for i in range(16)]),
+}
+
+
+def main():
+    n_rl = budget(150, 4000)
+    for box, (mk, groups) in BOXES.items():
+        dev = mk()
+        for name in ("chainmm", "ffnn"):
+            g = WORKLOADS[name]()
+            sim = WCSimulator(g, dev, noise_sigma=0.03, group_of=groups)
+            cp_a, _ = best_critical_path(
+                g, dev, lambda a: sim.exec_time(a, seed=0),
+                n_trials=budget(15, 50))
+            m, s = eval_mean_std(sim, cp_a)
+            emit(f"table9/{box}/{name}/crit_path", m * 1e6,
+                 f"ms={m*1e3:.2f}+-{s*1e3:.2f}")
+            eo = enumerative_assignment(g, dev)
+            m, s = eval_mean_std(sim, eo)
+            emit(f"table9/{box}/{name}/enumopt", m * 1e6,
+                 f"ms={m*1e3:.2f}+-{s*1e3:.2f}")
+            tr = DopplerTrainer(g, dev, seed=0, total_episodes=n_rl,
+                                **trainer_kwargs())
+            tr.stage1_imitation(budget(40, 200))
+            tr.stage2_sim(n_rl, sim)
+            m, s = eval_mean_std(sim, tr.best_assignment)
+            emit(f"table9/{box}/{name}/doppler", m * 1e6,
+                 f"ms={m*1e3:.2f}+-{s*1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

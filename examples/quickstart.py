@@ -1,0 +1,68 @@
+"""Quickstart: DOPPLER three-stage training on the FFNN workload graph.
+
+Builds the sharded FFNN dataflow graph (paper Appendix D.2), trains the
+dual policy through imitation -> simulator RL -> "real system" RL, and
+compares the resulting assignment against CRITICAL PATH and
+EnumerativeOptimizer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--episodes 300]
+"""
+import argparse
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.devices import p100_box
+from repro.core.enumopt import enumerative_assignment
+from repro.core.heuristics import best_critical_path
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import ffnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    graph = ffnn()
+    devices = p100_box(4)
+    print(f"graph: {graph}")
+
+    sim = WCSimulator(graph, devices, choose="fifo", noise_sigma=0.03)
+    real = WCSimulator(graph, devices, choose="random", noise_sigma=0.08)
+
+    cp_a, cp_t = best_critical_path(graph, devices,
+                                    lambda a: sim.exec_time(a, seed=0),
+                                    n_trials=20)
+    eo_a = enumerative_assignment(graph, devices)
+    print(f"CRITICAL PATH best: {cp_t*1e3:8.2f} ms")
+    print(f"EnumOpt:            {sim.exec_time(eo_a)*1e3:8.2f} ms")
+
+    trainer = DopplerTrainer(graph, devices, seed=args.seed,
+                             total_episodes=args.episodes)
+    print("\nStage I  (imitation of CRITICAL PATH)...")
+    losses = trainer.stage1_imitation(max(args.episodes // 10, 10))
+    print(f"  teacher NLL {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    print("Stage II (simulator RL)...")
+    trainer.stage2_sim(args.episodes, sim,
+                       log_every=max(args.episodes // 4, 1))
+
+    print("Stage III (online RL against the real WC engine)...")
+    trainer.stage3_system(max(args.episodes // 5, 10),
+                          lambda a: real.exec_time(a, seed=trainer.episode),
+                          log_every=max(args.episodes // 10, 1))
+
+    mean, std, a = trainer.evaluate(real)
+    print(f"\nDOPPLER-SYS best assignment: {mean*1e3:.2f} +- {std*1e3:.2f} ms")
+    res = real.run(a)
+    print(f"device utilization: {res.utilization().round(2)}")
+    print(f"bytes moved: {res.bytes_moved/1e6:.1f} MB over "
+          f"{res.transfer_count} transfers")
+
+
+if __name__ == "__main__":
+    main()

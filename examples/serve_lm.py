@@ -1,0 +1,63 @@
+"""Serving example: batched prefill + token-by-token decode with KV cache
+on a reduced gemma-family model (MQA: 1 KV head -> the sequence-parallel
+KV sharding path at production scale).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--batch 4 --gen 24]
+"""
+import argparse
+import dataclasses
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models.steps import make_decode_step, make_prefill_step
+from repro.models.transformer import init_decode_state, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config("gemma_2b").reduced(),
+                              n_layers=4, d_model=128, vocab=1024)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache_len = args.prompt_len + args.gen
+    state = init_decode_state(cfg, args.batch, cache_len)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, state = prefill(params, {"tokens": prompts}, state)
+    tok = jnp.argmax(logits, -1)[:, None]
+    print(f"prefill({args.batch}x{args.prompt_len}): "
+          f"{(time.time()-t0)*1e3:.0f} ms (incl. compile)")
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, state = decode(params, {"tokens": tok}, state,
+                               jnp.asarray(args.prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    gen = jnp.concatenate(out, 1)
+    dt = time.time() - t0
+    print(f"decoded {args.gen-1} steps x {args.batch} seqs in "
+          f"{dt*1e3:.0f} ms ({dt/(args.gen-1)*1e3:.1f} ms/step)")
+    print("generated token ids (seq 0):", gen[0].tolist())
+    assert gen.shape == (args.batch, args.gen)
+
+
+if __name__ == "__main__":
+    main()

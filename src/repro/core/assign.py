@@ -1,0 +1,277 @@
+"""ASSIGN (paper Alg. 3 / Fig. 2): jit-compiled episodic rollout.
+
+The whole |V|-step episode is a single `lax.scan`, so one rollout (and one
+replay-with-gradients) is one XLA call.  Message passing runs once per
+episode (§4.3); each scan step only evaluates the small PLC head plus a
+masked softmax over the precomputed SEL logits.
+
+The same scan supports three modes via `forced_actions` / `use_forced`:
+  * sampling rollout (training, stage II/III)       use_forced=False
+  * greedy rollout (evaluation)                     eps=0, greedy=True
+  * forced replay (gradient recompute / imitation)  use_forced=True
+and returns per-step log-probs and entropies of both policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .devices import DeviceModel
+from .features import COMM_FACTOR_DEFAULT, compute_static_features
+from .graph import DataflowGraph
+from .nn import masked_entropy, masked_log_softmax
+from .policies import episode_encodings, plc_logits
+
+BIG = 1e30
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphData:
+    """All static per-(graph, device-model) arrays, as jnp, jit-friendly."""
+    x: jnp.ndarray             # (n, 5) normalized static features
+    edges: jnp.ndarray         # (m, 2) int32
+    edge_feat: jnp.ndarray     # (m, 1) normalized comm cost
+    b_path: jnp.ndarray        # (n, Lb)
+    t_path: jnp.ndarray        # (n, Lt)
+    preds: jnp.ndarray         # (n, P) -1 padded
+    succs: jnp.ndarray         # (n, S) -1 padded
+    exec_time: jnp.ndarray     # (n, nd) seconds (0 for inputs)
+    xfer_lat: jnp.ndarray      # (nd, nd)
+    xfer_spb: jnp.ndarray      # (nd, nd) seconds per byte
+    out_bytes: jnp.ndarray     # (n,)
+    flops: jnp.ndarray         # (n,)
+    total_flops: jnp.ndarray   # ()
+    t_level: jnp.ndarray       # (n,) raw t-level cost (CP-ablation select)
+
+    def tree_flatten(self):
+        fields = dataclasses.astuple(self)
+        return fields, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self):
+        return self.x.shape[0]
+
+    @property
+    def nd(self):
+        return self.exec_time.shape[1]
+
+
+def _pad_lists(lists, fill=-1):
+    L = max((len(l) for l in lists), default=0)
+    L = max(L, 1)
+    out = np.full((len(lists), L), fill, dtype=np.int32)
+    for i, l in enumerate(lists):
+        out[i, :len(l)] = l
+    return out
+
+
+def build_graph_data(g: DataflowGraph, dev: DeviceModel,
+                     comm_factor: float = COMM_FACTOR_DEFAULT) -> GraphData:
+    sf = compute_static_features(g, comm_factor)
+    n, nd = g.n, dev.n
+    flops = g.flops_array()
+    exec_t = np.zeros((n, nd))
+    for v in range(n):
+        if not g.is_input(v):
+            exec_t[v] = dev.exec_overhead + flops[v] / dev.flops_per_sec
+    spb = 1.0 / dev.link_bw
+    np.fill_diagonal(spb, 0.0)
+    lat = dev.link_latency.copy()
+    edge_feat = (sf.edge_cost_norm[:, None] if g.m else
+                 np.zeros((0, 1)))
+    return GraphData(
+        x=jnp.asarray(sf.x_norm, jnp.float32),
+        edges=jnp.asarray(g.edge_array(), jnp.int32),
+        edge_feat=jnp.asarray(edge_feat, jnp.float32),
+        b_path=jnp.asarray(sf.b_path, jnp.int32),
+        t_path=jnp.asarray(sf.t_path, jnp.int32),
+        preds=jnp.asarray(_pad_lists(g.preds), jnp.int32),
+        succs=jnp.asarray(_pad_lists(g.succs), jnp.int32),
+        exec_time=jnp.asarray(exec_t, jnp.float32),
+        xfer_lat=jnp.asarray(lat, jnp.float32),
+        xfer_spb=jnp.asarray(spb, jnp.float32),
+        out_bytes=jnp.asarray(g.out_bytes_array(), jnp.float32),
+        flops=jnp.asarray(flops, jnp.float32),
+        total_flops=jnp.asarray(max(flops.sum(), 1e-9), jnp.float32),
+        t_level=jnp.asarray(sf.t_level, jnp.float32),
+    )
+
+
+# --------------------------------------------------------------- dynamics
+def _device_features(gd: GraphData, v, placed, assigned, est_end,
+                     device_avail, dev_comp):
+    """X_D for target vertex v — jnp twin of features.EpisodeState (nd, 5)."""
+    nd = gd.nd
+    p = gd.preds[v]                                   # (P,)
+    pm = (p >= 0) & placed[jnp.maximum(p, 0)]         # placed preds mask
+    ps = jnp.maximum(p, 0)
+    src = assigned[ps]                                # (P,) device of each pred
+    # arrival time of pred result on each device d: (P, nd)
+    arr = (est_end[ps][:, None] + gd.xfer_lat[src]
+           + gd.out_bytes[ps][:, None] * gd.xfer_spb[src])
+    arr_min = jnp.where(pm[:, None], arr, BIG).min(0)
+    arr_max = jnp.where(pm[:, None], arr, -BIG).max(0)
+    any_pred = pm.any()
+    f2 = jnp.where(any_pred, arr_min, 0.0)
+    f3 = jnp.where(any_pred, arr_max, 0.0)
+    f4 = jnp.maximum(device_avail, f3)
+    pred_flops_on = jax.ops.segment_sum(
+        jnp.where(pm, gd.flops[ps], 0.0), src, num_segments=nd)
+    scale = jnp.maximum(jnp.maximum(device_avail.max(), f4.max()), 1e-9)
+    feats = jnp.stack([dev_comp / gd.total_flops,
+                       pred_flops_on / gd.total_flops,
+                       f2 / scale, f3 / scale, f4 / scale], axis=1)
+    return feats, f3   # f3 (raw ready-time per device) reused by the update
+
+
+def _etf_update(gd: GraphData, v, d, ready_d, state):
+    (placed, assigned, est_end, device_avail, dev_comp,
+     unassigned_preds, dev_hsum, dev_cnt) = state
+    start = jnp.maximum(device_avail[d], ready_d)
+    dur = gd.exec_time[v, d]
+    end = start + dur
+    est_end = est_end.at[v].set(end)
+    device_avail = device_avail.at[d].set(end)
+    dev_comp = dev_comp.at[d].add(gd.flops[v])
+    placed = placed.at[v].set(True)
+    assigned = assigned.at[v].set(d)
+    s = gd.succs[v]
+    sm = s >= 0
+    unassigned_preds = unassigned_preds.at[jnp.where(sm, s, gd.n)].add(
+        jnp.where(sm, -1, 0))
+    return (placed, assigned, est_end, device_avail, dev_comp,
+            unassigned_preds, dev_hsum, dev_cnt)
+
+
+# ---------------------------------------------------------------- rollout
+@partial(jax.jit, static_argnames=("greedy", "sel_mode", "plc_mode"))
+def rollout(params, gd: GraphData, key, eps, forced_actions, use_forced,
+            greedy: bool = False, sel_mode: str = "learned",
+            plc_mode: str = "learned"):
+    """Run one ASSIGN episode.
+
+    Returns dict with: actions (n,2), sel_logp (n,), plc_logp (n,),
+    sel_ent (n,), plc_ent (n,).  `forced_actions`: (n,2) int32 (ignored when
+    use_forced is False, but must be supplied for a fixed jaxpr).
+
+    Ablations (paper Table 3): sel_mode='cp' replaces SEL with the
+    longest-path-to-exit heuristic (DOPPLER-PLC variant); plc_mode='etf'
+    replaces PLC with earliest-task-finish placement (DOPPLER-SEL)."""
+    n, nd = gd.n, gd.nd
+    H, sel_logits, z_plc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+    dh = H.shape[1]
+
+    placed = jnp.zeros(n, dtype=bool)
+    assigned = jnp.zeros(n, dtype=jnp.int32)
+    est_end = jnp.zeros(n, dtype=jnp.float32)
+    device_avail = jnp.zeros(nd, dtype=jnp.float32)
+    dev_comp = jnp.zeros(nd, dtype=jnp.float32)
+    n_preds = (gd.preds >= 0).sum(1).astype(jnp.int32)
+    unassigned_preds = jnp.concatenate(
+        [n_preds, jnp.zeros(1, jnp.int32)])          # slot n = trash
+    dev_hsum = jnp.zeros((nd, dh), dtype=jnp.float32)
+    dev_cnt = jnp.zeros(nd, dtype=jnp.float32)
+
+    def pick(key, logits, mask, forced, use_forced):
+        logp_all = masked_log_softmax(logits, mask)
+        k1, k2, k3 = jax.random.split(key, 3)
+        if greedy:
+            a = jnp.argmax(logp_all)
+        else:
+            soft = jax.random.categorical(k1, logp_all)
+            unif_logits = jnp.where(mask, 0.0, -jnp.inf)
+            unif = jax.random.categorical(k2, unif_logits)
+            explore = jax.random.bernoulli(k3, eps)
+            a = jnp.where(explore, unif, soft)
+        a = jnp.where(use_forced, forced, a).astype(jnp.int32)
+        return a, logp_all[a], masked_entropy(logits, mask)
+
+    def step(carry, inp):
+        key, state = carry
+        forced_v, forced_d = inp
+        (placed, assigned, est_end, device_avail, dev_comp,
+         unassigned_preds, dev_hsum, dev_cnt) = state
+        key, kv, kd = jax.random.split(key, 3)
+
+        cand = (~placed) & (unassigned_preds[:n] == 0)
+        if sel_mode == "cp":
+            v_cp = jnp.argmax(jnp.where(cand, gd.t_level, -BIG))
+            v, logp_v, ent_v = pick(kv, sel_logits, cand,
+                                    jnp.where(use_forced, forced_v, v_cp),
+                                    jnp.array(True))
+        else:
+            v, logp_v, ent_v = pick(kv, sel_logits, cand, forced_v,
+                                    use_forced)
+
+        x_dev, ready = _device_features(gd, v, placed, assigned, est_end,
+                                        device_avail, dev_comp)
+        h_dev = dev_hsum / jnp.maximum(dev_cnt[:, None], 1.0)
+        logits_d = plc_logits(params, H[v], h_dev, x_dev, z_plc[v])
+        dmask = jnp.ones(nd, dtype=bool)
+        if plc_mode == "etf":
+            finish = jnp.maximum(device_avail, ready) + gd.exec_time[v]
+            d_etf = jnp.argmin(finish)
+            d, logp_d, ent_d = pick(kd, logits_d, dmask,
+                                    jnp.where(use_forced, forced_d, d_etf),
+                                    jnp.array(True))
+        else:
+            d, logp_d, ent_d = pick(kd, logits_d, dmask, forced_d,
+                                    use_forced)
+
+        state = _etf_update(gd, v, d, ready[d], state)
+        (placed, assigned, est_end, device_avail, dev_comp,
+         unassigned_preds, dev_hsum, dev_cnt) = state
+        dev_hsum = dev_hsum.at[d].add(H[v])
+        dev_cnt = dev_cnt.at[d].add(1.0)
+        state = (placed, assigned, est_end, device_avail, dev_comp,
+                 unassigned_preds, dev_hsum, dev_cnt)
+        return (key, state), (v, d, logp_v, logp_d, ent_v, ent_d)
+
+    init = (key, (placed, assigned, est_end, device_avail, dev_comp,
+                  unassigned_preds, dev_hsum, dev_cnt))
+    (_, state), outs = jax.lax.scan(step, init, (forced_actions[:, 0],
+                                                 forced_actions[:, 1]))
+    v_seq, d_seq, logp_v, logp_d, ent_v, ent_d = outs
+    assigned = state[1]
+    return {"order": v_seq, "devices": d_seq,
+            "actions": jnp.stack([v_seq, d_seq], 1),
+            "assignment": assigned,
+            "sel_logp": logp_v, "plc_logp": logp_d,
+            "sel_ent": ent_v, "plc_ent": ent_d,
+            "est_makespan": state[3].max()}
+
+
+def rollout_py(params, g: DataflowGraph, dev: DeviceModel, gd: GraphData,
+               key, eps: float = 0.0, greedy: bool = True):
+    """Convenience wrapper returning a numpy assignment."""
+    dummy = jnp.zeros((g.n, 2), jnp.int32)
+    out = rollout(params, gd, key, jnp.float32(eps), dummy,
+                  jnp.array(False), greedy=greedy)
+    return np.asarray(out["assignment"]), out
+
+
+# ------------------------------------------------------- batched rollout
+@partial(jax.jit, static_argnames=("sel_mode", "plc_mode"))
+def rollout_batch(params, gd: GraphData, keys, eps,
+                  sel_mode: str = "learned", plc_mode: str = "learned"):
+    """Population sampling: K independent episodes in one vmapped call.
+    keys: (K, 2) PRNG keys.  Returns the rollout dict with a leading K
+    axis — one XLA dispatch for the whole population (~K x the episode
+    throughput of serial sampling on accelerators)."""
+    dummy = jnp.zeros((gd.n, 2), jnp.int32)
+
+    def one(key):
+        return rollout(params, gd, key, eps, dummy, jnp.array(False),
+                       greedy=False, sel_mode=sel_mode, plc_mode=plc_mode)
+
+    return jax.vmap(one)(keys)

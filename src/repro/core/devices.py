@@ -1,0 +1,127 @@
+"""Hardware device models for the WC engine (simulator + real executor).
+
+The paper's engine ran on P100/V100 NVLink boxes; per DESIGN.md §3 the
+device model is parameterized so the same DOPPLER machinery targets TPU
+pods: a TPU v5e preset models ICI neighbor links on a 2D torus with
+hop-count latency (the TPU-idiomatic equivalent of NVLink P2P).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeviceModel:
+    """n devices with per-device compute rate and pairwise link model.
+
+    Attributes:
+      flops_per_sec: (n,) effective FLOP/s per device.
+      link_bw: (n, n) bytes/sec for a direct transfer d1->d2 (0 diag).
+      link_latency: (n, n) seconds of fixed setup per transfer.
+      exec_overhead: per-kernel launch overhead (seconds).
+      name: preset name.
+    """
+    flops_per_sec: np.ndarray
+    link_bw: np.ndarray
+    link_latency: np.ndarray
+    exec_overhead: float = 5e-6
+    name: str = "custom"
+
+    @property
+    def n(self) -> int:
+        return len(self.flops_per_sec)
+
+    def exec_time(self, flops: float, device: int) -> float:
+        return self.exec_overhead + flops / self.flops_per_sec[device]
+
+    def transfer_time(self, nbytes: float, src: int, dst: int) -> float:
+        if src == dst:
+            return 0.0
+        return self.link_latency[src, dst] + nbytes / self.link_bw[src, dst]
+
+    def transfer_time_matrix(self, nbytes: float) -> np.ndarray:
+        """(n, n) transfer seconds for `nbytes` between each pair."""
+        with np.errstate(divide="ignore"):
+            t = self.link_latency + nbytes / self.link_bw
+        np.fill_diagonal(t, 0.0)
+        return t
+
+
+def p100_box(n: int = 4) -> DeviceModel:
+    """4x Tesla P100 (paper's main testbed): ~9.5 TF fp32 effective ~4.7,
+    full NVLink mesh ~40 GB/s per direction per pair."""
+    flops = np.full(n, 4.7e12)
+    bw = np.full((n, n), 40e9)
+    np.fill_diagonal(bw, np.inf)
+    lat = np.full((n, n), 10e-6)
+    np.fill_diagonal(lat, 0.0)
+    return DeviceModel(flops, bw, lat, name=f"p100x{n}")
+
+
+def v100_two_groups(n: int = 8) -> DeviceModel:
+    """8x V100 in two NVLink-full groups of 4 (paper App. H.2/J):
+    intra-group ~100 GB/s; across groups only 4 links shared -> ~25 GB/s."""
+    assert n == 8
+    flops = np.full(n, 14e12)
+    bw = np.empty((n, n))
+    for i in range(n):
+        for j in range(n):
+            same = (i // 4) == (j // 4)
+            bw[i, j] = 100e9 if same else 25e9
+    np.fill_diagonal(bw, np.inf)
+    lat = np.where(np.equal.outer(np.arange(n) // 4, np.arange(n) // 4),
+                   8e-6, 20e-6).astype(float)
+    np.fill_diagonal(lat, 0.0)
+    return DeviceModel(flops, bw, lat, name="v100x8_2groups")
+
+
+def tpu_v5e_slice(rows: int = 2, cols: int = 2,
+                  bf16_flops: float = 197e12,
+                  link_bw_per_dir: float = 50e9) -> DeviceModel:
+    """TPU v5e 2D-torus slice. P2P bandwidth between chips is modeled as the
+    single-link ICI rate; latency grows with torus hop count (Manhattan
+    distance with wraparound). This is the DESIGN.md §3 TPU adaptation of
+    the paper's NVLink topology model."""
+    n = rows * cols
+    flops = np.full(n, bf16_flops)
+    bw = np.full((n, n), link_bw_per_dir)
+    np.fill_diagonal(bw, np.inf)
+    lat = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            ri, ci, rj, cj = i // cols, i % cols, j // cols, j % cols
+            dr = min(abs(ri - rj), rows - abs(ri - rj))
+            dc = min(abs(ci - cj), cols - abs(ci - cj))
+            hops = max(1, dr + dc)
+            lat[i, j] = 1e-6 * hops
+    return DeviceModel(flops, bw, lat, name=f"tpu_v5e_{rows}x{cols}")
+
+
+def uniform_box(n: int, flops: float = 1e12, bw: float = 50e9,
+                latency: float = 5e-6) -> DeviceModel:
+    """Homogeneous fully-connected box — handy for tests."""
+    f = np.full(n, flops)
+    b = np.full((n, n), bw)
+    np.fill_diagonal(b, np.inf)
+    l = np.full((n, n), latency)
+    np.fill_diagonal(l, 0.0)
+    return DeviceModel(f, b, l, name=f"uniform{n}")
+
+
+PRESETS = {
+    "p100x4": lambda: p100_box(4),
+    "v100x8": v100_two_groups,
+    "tpu_v5e_2x2": lambda: tpu_v5e_slice(2, 2),
+    "tpu_v5e_4x4": lambda: tpu_v5e_slice(4, 4),
+    "tpu_v5e_16x16": lambda: tpu_v5e_slice(16, 16),
+}
+
+
+def get_device_model(name: str) -> DeviceModel:
+    if name not in PRESETS:
+        raise KeyError(f"unknown device preset {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]()

@@ -1,0 +1,143 @@
+"""GDP-style baseline (Zhou et al., 2019): graph embedding + sequential
+attention, single placement policy.
+
+One GNN pass encodes the graph; a causal single-head self-attention layer
+over the topologically-ordered node sequence (with sinusoidal positions)
+produces all device logits in one forward — the "sequential attention"
+placer.  No node-selection policy and no per-step dynamic features, which
+is exactly the modeling gap DOPPLER's dual policy closes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train.optim import adamw_init, adamw_update, linear_schedule
+from .assign import GraphData, build_graph_data
+from .devices import DeviceModel
+from .gnn import apply_gnn, init_gnn
+from .graph import DataflowGraph
+from .nn import apply_mlp, init_linear, init_mlp, apply_linear, \
+    masked_entropy, masked_log_softmax
+from .simulator import WCSimulator
+
+
+def _positions(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    pe = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(pe, jnp.float32)
+
+
+def init_gdp(key, n_devices: int, d_hidden: int = 64, gnn_layers: int = 2):
+    ks = jax.random.split(key, 6)
+    return {
+        "gnn": init_gnn(ks[0], 5, d_hidden, gnn_layers, d_edge=1),
+        "wq": init_linear(ks[1], d_hidden, d_hidden),
+        "wk": init_linear(ks[2], d_hidden, d_hidden),
+        "wv": init_linear(ks[3], d_hidden, d_hidden),
+        "head": init_mlp(ks[4], [2 * d_hidden, d_hidden, n_devices]),
+    }
+
+
+@partial(jax.jit, static_argnames=("greedy",))
+def gdp_rollout(params, gd: GraphData, order, key, eps, forced_devs,
+                use_forced, greedy: bool = False):
+    n, nd = gd.n, gd.nd
+    h = apply_gnn(params["gnn"], gd.x, gd.edges, gd.edge_feat)
+    hseq = h[order] + _positions(n, h.shape[1])
+    q = apply_linear(params["wq"], hseq)
+    k = apply_linear(params["wk"], hseq)
+    v = apply_linear(params["wv"], hseq)
+    scores = q @ k.T / jnp.sqrt(q.shape[-1])
+    causal = jnp.tril(jnp.ones((n, n), bool))
+    scores = jnp.where(causal, scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1) @ v
+    feats = jnp.concatenate([hseq, attn], -1)
+    logits = apply_mlp(params["head"], feats)            # (n, nd) in order
+    logp_all = jax.nn.log_softmax(logits, -1)
+
+    keys = jax.random.split(key, 3)
+    soft = jax.random.categorical(keys[0], logp_all, axis=-1)
+    unif = jax.random.randint(keys[1], (n,), 0, nd)
+    explore = jax.random.bernoulli(keys[2], eps, (n,))
+    if greedy:
+        d_seq = jnp.argmax(logp_all, -1)
+    else:
+        d_seq = jnp.where(explore, unif, soft)
+    d_seq = jnp.where(use_forced, forced_devs[order], d_seq).astype(jnp.int32)
+    logps = jnp.take_along_axis(logp_all, d_seq[:, None], 1)[:, 0]
+    p = jnp.exp(logp_all)
+    ents = -(p * logp_all).sum(-1)
+    assignment = jnp.zeros(n, jnp.int32).at[order].set(d_seq)
+    return {"assignment": assignment, "logp": logps, "ent": ents}
+
+
+@jax.jit
+def _gdp_grad(params, gd, order, key, forced_assignment, advantage,
+              entropy_w):
+    def loss(p):
+        out = gdp_rollout(p, gd, order, key, jnp.float32(0.0),
+                          forced_assignment, jnp.array(True))
+        return -(advantage * out["logp"].sum() + entropy_w * out["ent"].mean())
+    return jax.value_and_grad(loss)(params)
+
+
+class GDPTrainer:
+    """Hyperparameters per paper §6.1 (same schedule family as DOPPLER:
+    lr 1e-4 -> 1e-7, eps 0.2 -> 0, entropy 1e-2)."""
+
+    def __init__(self, graph: DataflowGraph, dev: DeviceModel, seed: int = 0,
+                 d_hidden: int = 64, lr0: float = 1e-4, lr1: float = 1e-7,
+                 eps0: float = 0.2, eps1: float = 0.0,
+                 entropy_weight: float = 1e-2, total_episodes: int = 4000):
+        self.g, self.dev = graph, dev
+        self.gd = build_graph_data(graph, dev)
+        self.order = jnp.asarray(np.array(graph.topo_order), jnp.int32)
+        self.key, pkey = jax.random.split(jax.random.PRNGKey(seed))
+        self.params = init_gdp(pkey, dev.n, d_hidden)
+        self.opt_state = adamw_init(self.params)
+        self.lr = linear_schedule(lr0, lr1, total_episodes)
+        self.eps = linear_schedule(eps0, eps1, total_episodes)
+        self.entropy_weight = entropy_weight
+        self.episode = 0
+        self._rsum = self._rsq = 0.0
+        self._rcount = 0
+        self.best_time = np.inf
+        self.best_assignment = None
+        self.history = []
+
+    def _nk(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def train(self, n_episodes: int, sim: WCSimulator, log_every: int = 0):
+        dummy = jnp.zeros(self.g.n, jnp.int32)
+        for i in range(n_episodes):
+            out = gdp_rollout(self.params, self.gd, self.order, self._nk(),
+                              jnp.float32(self.eps(self.episode)),
+                              dummy, jnp.array(False))
+            a = np.asarray(out["assignment"])
+            t = sim.exec_time(a, seed=self.episode)
+            r = -t
+            mean = self._rsum / self._rcount if self._rcount else 0.0
+            var = (self._rsq / self._rcount - mean ** 2) if self._rcount else 1.0
+            adv = (r - mean) / (np.sqrt(max(var, 1e-12)) + 1e-9)
+            self._rsum += r; self._rsq += r * r; self._rcount += 1
+            _, grads = _gdp_grad(self.params, self.gd, self.order, self._nk(),
+                                 out["assignment"], jnp.float32(adv),
+                                 jnp.float32(self.entropy_weight))
+            self.params, self.opt_state = adamw_update(
+                grads, self.opt_state, self.params, self.lr(self.episode))
+            self.episode += 1
+            if t < self.best_time:
+                self.best_time, self.best_assignment = t, a
+            self.history.append(t)
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[gdp] ep {i+1}: t={t*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return self.history

@@ -1,0 +1,62 @@
+"""Message-passing GNN encoder (paper Eq. 2) in pure JAX.
+
+h_v^[k] = phi(h_v^[k-1], (+)_{u in N(v)} psi(h_u^[k-1], h_v^[k-1], e_uv))
+
+We aggregate over *both* edge directions (dependencies flow forward; cost
+information must also flow backward for placement decisions) with separate
+psi networks, and (+) = segment-sum.  One full pass per MDP *episode*
+(§4.3); per-step dynamics enter the policies only through X_D.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .nn import apply_mlp, init_mlp
+
+
+def init_gnn(key, d_in: int, d_hidden: int, n_layers: int = 2,
+             d_edge: int = 1):
+    keys = jax.random.split(key, 2 * n_layers + 1)
+    params = {"embed": init_mlp(keys[0], [d_in, d_hidden]), "layers": []}
+    for k in range(n_layers):
+        params["layers"].append({
+            "psi_fwd": init_mlp(keys[2 * k + 1],
+                                [2 * d_hidden + d_edge, d_hidden, d_hidden]),
+            "psi_bwd": init_mlp(keys[2 * k + 2],
+                                [2 * d_hidden + d_edge, d_hidden, d_hidden]),
+            "phi": init_mlp(jax.random.fold_in(key, 1000 + k),
+                            [3 * d_hidden, d_hidden, d_hidden]),
+        })
+    return params
+
+
+def apply_gnn(params, x, edges, edge_feat):
+    """x: (n, d_in) node features; edges: (m, 2) int (src, dst);
+    edge_feat: (m, d_edge). Returns H: (n, d_hidden)."""
+    n = x.shape[0]
+    h = apply_mlp(params["embed"], x)
+    if edges.shape[0] == 0:
+        src = dst = jnp.zeros((0,), dtype=jnp.int32)
+    else:
+        src, dst = edges[:, 0], edges[:, 1]
+    for lp in params["layers"]:
+        hs, hd = h[src], h[dst]
+        msg_f = apply_mlp(lp["psi_fwd"], jnp.concatenate([hs, hd, edge_feat], -1))
+        msg_b = apply_mlp(lp["psi_bwd"], jnp.concatenate([hd, hs, edge_feat], -1))
+        agg_in = jax.ops.segment_sum(msg_f, dst, num_segments=n)
+        agg_out = jax.ops.segment_sum(msg_b, src, num_segments=n)
+        h_new = apply_mlp(lp["phi"], jnp.concatenate([h, agg_in, agg_out], -1))
+        h = h + h_new                        # residual for depth stability
+    return h
+
+
+def path_embedding(h, path_idx):
+    """Mean of node embeddings along each vertex's critical path.
+
+    h: (n, d); path_idx: (n, L) int, -1-padded. Returns (n, d)."""
+    mask = path_idx >= 0
+    safe = jnp.where(mask, path_idx, 0)
+    gathered = h[safe]                       # (n, L, d)
+    w = mask[..., None].astype(h.dtype)
+    return (gathered * w).sum(1) / jnp.maximum(w.sum(1), 1.0)

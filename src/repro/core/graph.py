@@ -1,0 +1,195 @@
+"""Dataflow-graph IR for DOPPLER.
+
+A :class:`DataflowGraph` is the static graph G = (V, E) of §2 of the paper:
+vertices are computations (kernel calls), directed edges are data
+dependencies.  Each vertex carries a compute cost (FLOPs) and the byte size
+of its output tensor; each edge's communication cost is the producer's
+output bytes (times a calibration factor, applied in features.py).
+
+Vertices are additionally tagged with a *meta-op* id and a role
+('shard' | 'reduce' | 'input') so that the EnumerativeOptimizer baseline
+(Appendix B) can recover the sharded-op structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Vertex kinds from Appendix A.1 of the paper.
+VERTEX_KINDS = (
+    "input",
+    "matmul",
+    "input_elemwise",
+    "straight_elemwise",
+    "bcast_elemwise",
+    "max_reduction",
+    "min_reduction",
+    "sum_reduction",
+    "product_reduction",
+    "formation",
+    "complexer",
+    "fill",
+    "squeezer",
+    "select",
+)
+
+
+@dataclasses.dataclass
+class Vertex:
+    vid: int
+    kind: str
+    flops: float            # floating point ops to execute this vertex
+    out_bytes: float        # bytes of the output tensor
+    meta_op: int = -1       # meta-op group (EnumOpt); -1 = ungrouped
+    role: str = "shard"     # 'shard' | 'reduce' | 'input'
+    label: str = ""
+    out_shape: tuple = ()   # concrete output shape (real executor payloads)
+
+    def __post_init__(self):
+        if self.kind not in VERTEX_KINDS:
+            raise ValueError(f"unknown vertex kind {self.kind!r}")
+        if self.kind == "input":
+            self.role = "input"
+
+
+class DataflowGraph:
+    """Immutable-after-freeze DAG with cached adjacency and topo order."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.vertices: list[Vertex] = []
+        self.edges: list[tuple[int, int]] = []
+        self._frozen = False
+
+    # ------------------------------------------------------------- build
+    def add_vertex(self, kind: str, flops: float = 0.0, out_bytes: float = 0.0,
+                   meta_op: int = -1, role: str = "shard", label: str = "",
+                   out_shape: tuple = ()) -> int:
+        assert not self._frozen, "graph is frozen"
+        vid = len(self.vertices)
+        self.vertices.append(Vertex(vid, kind, float(flops), float(out_bytes),
+                                    meta_op, role, label, tuple(out_shape)))
+        return vid
+
+    def add_edge(self, src: int, dst: int) -> None:
+        assert not self._frozen, "graph is frozen"
+        assert 0 <= src < len(self.vertices) and 0 <= dst < len(self.vertices)
+        self.edges.append((src, dst))
+
+    def freeze(self) -> "DataflowGraph":
+        """Validate the DAG and build adjacency / topological caches."""
+        n = len(self.vertices)
+        self.preds: list[list[int]] = [[] for _ in range(n)]
+        self.succs: list[list[int]] = [[] for _ in range(n)]
+        seen = set()
+        dedup = []
+        for (s, d) in self.edges:
+            if (s, d) in seen or s == d:
+                continue
+            seen.add((s, d))
+            dedup.append((s, d))
+            self.preds[d].append(s)
+            self.succs[s].append(d)
+        self.edges = dedup
+
+        # Kahn topological order (also detects cycles).
+        indeg = np.array([len(self.preds[v]) for v in range(n)])
+        frontier = [v for v in range(n) if indeg[v] == 0]
+        topo: list[int] = []
+        indeg_work = indeg.copy()
+        while frontier:
+            v = frontier.pop()
+            topo.append(v)
+            for w in self.succs[v]:
+                indeg_work[w] -= 1
+                if indeg_work[w] == 0:
+                    frontier.append(w)
+        if len(topo) != n:
+            raise ValueError(f"{self.name}: dataflow graph has a cycle")
+        self.topo_order = topo
+        self.entry_nodes = [v for v in range(n) if not self.preds[v]]
+        self.exit_nodes = [v for v in range(n) if not self.succs[v]]
+        self._frozen = True
+        return self
+
+    # ------------------------------------------------------------ access
+    @property
+    def n(self) -> int:
+        return len(self.vertices)
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    def is_input(self, v: int) -> bool:
+        return self.vertices[v].kind == "input"
+
+    def edge_bytes(self, src: int) -> float:
+        return self.vertices[src].out_bytes
+
+    def flops_array(self) -> np.ndarray:
+        return np.array([v.flops for v in self.vertices], dtype=np.float64)
+
+    def out_bytes_array(self) -> np.ndarray:
+        return np.array([v.out_bytes for v in self.vertices], dtype=np.float64)
+
+    def input_mask(self) -> np.ndarray:
+        return np.array([self.is_input(v) for v in range(self.n)], dtype=bool)
+
+    def edge_array(self) -> np.ndarray:
+        """(m, 2) int array of (src, dst)."""
+        if not self.edges:
+            return np.zeros((0, 2), dtype=np.int32)
+        return np.asarray(self.edges, dtype=np.int32)
+
+    # --------------------------------------------------------- meta-ops
+    def meta_ops(self) -> list[dict]:
+        """Topologically-ordered meta-op list for EnumerativeOptimizer.
+
+        Returns [{'id', 'shard_ops': [vid...], 'reduce_ops': [vid...]}] in an
+        order such that no vertex of a later meta-op reaches an earlier one.
+        """
+        groups: dict[int, dict] = {}
+        for v in self.vertices:
+            if v.meta_op < 0 or v.kind == "input":
+                continue
+            g = groups.setdefault(v.meta_op, {"id": v.meta_op,
+                                              "shard_ops": [], "reduce_ops": []})
+            (g["shard_ops"] if v.role == "shard" else g["reduce_ops"]).append(v.vid)
+        # order groups by the earliest topo position of their vertices
+        pos = {v: i for i, v in enumerate(self.topo_order)}
+        ordered = sorted(groups.values(),
+                         key=lambda g: min(pos[v] for v in
+                                           g["shard_ops"] + g["reduce_ops"]))
+        return ordered
+
+    # ------------------------------------------------------------ misc
+    def critical_path_lower_bound(self, flops_per_sec: float) -> float:
+        """Longest pure-compute path (seconds) — a makespan lower bound."""
+        n = self.n
+        dp = np.zeros(n)
+        for v in reversed(self.topo_order):
+            t = self.vertices[v].flops / flops_per_sec
+            best = 0.0
+            for w in self.succs[v]:
+                best = max(best, dp[w])
+            dp[v] = t + best
+        return float(dp.max(initial=0.0))
+
+    def total_flops(self) -> float:
+        return float(sum(v.flops for v in self.vertices))
+
+    def __repr__(self):
+        return (f"DataflowGraph({self.name!r}, n={self.n}, m={self.m}, "
+                f"meta_ops={len({v.meta_op for v in self.vertices if v.meta_op >= 0})})")
+
+
+def validate_assignment(graph: DataflowGraph, assignment: Sequence[int],
+                        n_devices: int) -> None:
+    a = np.asarray(assignment)
+    if a.shape != (graph.n,):
+        raise ValueError(f"assignment shape {a.shape} != ({graph.n},)")
+    if (a < 0).any() or (a >= n_devices).any():
+        raise ValueError("assignment maps a vertex outside the device range")

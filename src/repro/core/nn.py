@@ -1,0 +1,60 @@
+"""Minimal pure-JAX NN primitives (no flax/optax in this environment).
+
+Parameters are pytrees of jnp arrays; init functions take PRNG keys.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_linear(key, d_in: int, d_out: int, scale: float | None = None):
+    kw, _ = jax.random.split(key)
+    s = scale if scale is not None else 1.0 / math.sqrt(max(d_in, 1))
+    return {"w": jax.random.normal(kw, (d_in, d_out)) * s,
+            "b": jnp.zeros((d_out,))}
+
+
+def apply_linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, sizes: Sequence[int]):
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {"layers": [init_linear(k, a, b)
+                       for k, a, b in zip(keys, sizes[:-1], sizes[1:])]}
+
+
+def apply_mlp(p, x, act=jax.nn.relu, final_act=None):
+    layers = p["layers"]
+    for i, lp in enumerate(layers):
+        x = apply_linear(lp, x)
+        if i < len(layers) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def leaky_relu(x, alpha: float = 0.01):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def masked_log_softmax(logits, mask):
+    """log softmax over entries where mask, -inf elsewhere."""
+    neg = jnp.finfo(logits.dtype).min
+    z = jnp.where(mask, logits, neg)
+    return jax.nn.log_softmax(z)
+
+
+def masked_entropy(logits, mask):
+    logp = masked_log_softmax(logits, mask)
+    p = jnp.exp(logp)
+    return -jnp.sum(jnp.where(mask, p * logp, 0.0))
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,140 @@
+"""PLACETO-style baseline (Addanki et al., 2019).
+
+Single *device* policy, no learned node selection: vertices are visited in
+a fixed topological order; at every MDP step the GNN re-encodes the graph
+with the current partial assignment baked into the node features (this
+per-step message passing is exactly what makes PLACETO slow — §4.3 and
+Table 6), then a feedforward head scores the devices for the current node.
+
+Trained with the same REINFORCE-with-baseline machinery as DOPPLER.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train.optim import adamw_init, adamw_update, linear_schedule
+from .assign import GraphData, build_graph_data
+from .devices import DeviceModel
+from .gnn import apply_gnn, init_gnn
+from .graph import DataflowGraph
+from .nn import apply_mlp, init_mlp, masked_entropy, masked_log_softmax
+from .simulator import WCSimulator
+
+N_DYN = 3   # [placed, assigned_dev/nd, is_current]
+
+
+def init_placeto(key, n_devices: int, d_hidden: int = 64,
+                 gnn_layers: int = 2):
+    k1, k2 = jax.random.split(key)
+    return {
+        "gnn": init_gnn(k1, 5 + N_DYN, d_hidden, gnn_layers, d_edge=1),
+        "head": init_mlp(k2, [2 * d_hidden, d_hidden, n_devices]),
+    }
+
+
+@partial(jax.jit, static_argnames=("greedy",))
+def placeto_rollout(params, gd: GraphData, order, key, eps, forced_devs,
+                    use_forced, greedy: bool = False):
+    """order: (n,) fixed topological visit order."""
+    n, nd = gd.n, gd.nd
+
+    def step(carry, v):
+        key, assigned, placed = carry
+        key, kd = jax.random.split(key)
+        dyn = jnp.stack([placed.astype(jnp.float32),
+                         assigned.astype(jnp.float32) / nd,
+                         (jnp.arange(n) == v).astype(jnp.float32)], 1)
+        x = jnp.concatenate([gd.x, dyn], 1)
+        h = apply_gnn(params["gnn"], x, gd.edges, gd.edge_feat)  # per-step MP!
+        pooled = h.mean(0)
+        hv = jnp.concatenate([h[v], pooled])
+        logits = apply_mlp(params["head"], hv)          # (nd,)
+        logp_all = masked_log_softmax(logits, jnp.ones(nd, bool))
+        if greedy:
+            d = jnp.argmax(logp_all)
+        else:
+            k1, k2, k3 = jax.random.split(kd, 3)
+            soft = jax.random.categorical(k1, logp_all)
+            unif = jax.random.randint(k2, (), 0, nd)
+            d = jnp.where(jax.random.bernoulli(k3, eps), unif, soft)
+        d = jnp.where(use_forced, forced_devs[v], d).astype(jnp.int32)
+        ent = masked_entropy(logits, jnp.ones(nd, bool))
+        assigned = assigned.at[v].set(d)
+        placed = placed.at[v].set(True)
+        return (key, assigned, placed), (logp_all[d], ent)
+
+    init = (key, jnp.zeros(n, jnp.int32), jnp.zeros(n, bool))
+    (_, assigned, _), (logps, ents) = jax.lax.scan(step, init, order)
+    return {"assignment": assigned, "logp": logps, "ent": ents}
+
+
+@jax.jit
+def _placeto_grad(params, gd, order, key, forced_devs, advantage, entropy_w):
+    def loss(p):
+        out = placeto_rollout(p, gd, order, key, jnp.float32(0.0),
+                              forced_devs, jnp.array(True))
+        return -(advantage * out["logp"].sum() + entropy_w * out["ent"].mean())
+    return jax.value_and_grad(loss)(params)
+
+
+class PlacetoTrainer:
+    """REINFORCE trainer for the PLACETO baseline.  Hyperparameters per
+    paper §6.1: lr 1e-3 -> 1e-6, eps 0.5 -> 0, entropy 1e-2."""
+
+    def __init__(self, graph: DataflowGraph, dev: DeviceModel, seed: int = 0,
+                 d_hidden: int = 64, lr0: float = 1e-3, lr1: float = 1e-6,
+                 eps0: float = 0.5, eps1: float = 0.0,
+                 entropy_weight: float = 1e-2, total_episodes: int = 4000):
+        self.g, self.dev = graph, dev
+        self.gd = build_graph_data(graph, dev)
+        self.order = jnp.asarray(np.array(graph.topo_order), jnp.int32)
+        self.key, pkey = jax.random.split(jax.random.PRNGKey(seed))
+        self.params = init_placeto(pkey, dev.n, d_hidden)
+        self.opt_state = adamw_init(self.params)
+        self.lr = linear_schedule(lr0, lr1, total_episodes)
+        self.eps = linear_schedule(eps0, eps1, total_episodes)
+        self.entropy_weight = entropy_weight
+        self.episode = 0
+        self._rsum = 0.0
+        self._rsq = 0.0
+        self._rcount = 0
+        self.best_time = np.inf
+        self.best_assignment = None
+        self.history = []
+
+    def _nk(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def train(self, n_episodes: int, sim: WCSimulator, log_every: int = 0):
+        dummy = jnp.zeros(self.g.n, jnp.int32)
+        for i in range(n_episodes):
+            out = placeto_rollout(self.params, self.gd, self.order,
+                                  self._nk(),
+                                  jnp.float32(self.eps(self.episode)),
+                                  dummy, jnp.array(False))
+            a = np.asarray(out["assignment"])
+            t = sim.exec_time(a, seed=self.episode)
+            r = -t
+            mean = self._rsum / self._rcount if self._rcount else 0.0
+            var = (self._rsq / self._rcount - mean ** 2) if self._rcount else 1.0
+            adv = (r - mean) / (np.sqrt(max(var, 1e-12)) + 1e-9)
+            self._rsum += r; self._rsq += r * r; self._rcount += 1
+            _, grads = _placeto_grad(self.params, self.gd, self.order,
+                                     self._nk(), out["assignment"],
+                                     jnp.float32(adv),
+                                     jnp.float32(self.entropy_weight))
+            self.params, self.opt_state = adamw_update(
+                grads, self.opt_state, self.params, self.lr(self.episode))
+            self.episode += 1
+            if t < self.best_time:
+                self.best_time, self.best_assignment = t, a
+            self.history.append(t)
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[placeto] ep {i+1}: t={t*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return self.history

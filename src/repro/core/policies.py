@@ -1,0 +1,70 @@
+"""Dual policy networks SEL_theta and PLC_theta (paper Eq. 3-8).
+
+SEL (node policy):   h_v = [ H[v] || h_{v,b} || h_{v,t} || Z[v] ]
+                     Q_G(v) = softmax(FFNN(h_v)) over the candidate set C.
+
+PLC (device policy): h_{v,d} = [ H[v] || h_d || Y[d] || Z[v] ]
+                     Q_D(d) = softmax(FFNN(LeakyReLU(FFNN(h_{v,d}))))
+
+with H = GNN(G, X_G) computed ONCE per episode (§4.3), Z = FFNN(X_V),
+Y = FFNN(X_D) recomputed each step from the dynamic device features, and
+h_d = mean embedding of the vertices already placed on device d.
+
+Exploration: the paper describes epsilon-greedy (argmax w.p. 1-eps).  Since
+both policies are trained with the policy gradient (Eq. 10), actions must
+be *sampled* from Pi_theta during training; we therefore sample from the
+masked softmax w.p. 1-eps and uniformly from the candidate set w.p. eps
+(the epsilon-greedy exploration of the paper, with the softmax as the
+greedy component), and expose a `greedy` mode (pure argmax, eps=0) for
+evaluation.  This is recorded as an assumption in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gnn import apply_gnn, init_gnn, path_embedding
+from .nn import apply_mlp, init_mlp, leaky_relu
+
+N_STATIC_FEATS = 5      # Appendix E.1
+N_DEVICE_FEATS = 5      # Appendix E.2
+
+
+def init_policies(key, d_hidden: int = 64, d_z: int = 32, d_y: int = 32,
+                  gnn_layers: int = 2):
+    ks = jax.random.split(key, 8)
+    return {
+        "gnn": init_gnn(ks[0], N_STATIC_FEATS, d_hidden, gnn_layers, d_edge=1),
+        "sel_z": init_mlp(ks[1], [N_STATIC_FEATS, d_z]),
+        "sel_head": init_mlp(ks[2], [3 * d_hidden + d_z, d_hidden, 1]),
+        "plc_z": init_mlp(ks[3], [N_STATIC_FEATS, d_z]),
+        "plc_y": init_mlp(ks[4], [N_DEVICE_FEATS, d_y]),
+        "plc_head1": init_mlp(ks[5], [2 * d_hidden + d_y + d_z, d_hidden]),
+        "plc_head2": init_mlp(ks[6], [d_hidden, 1]),
+    }
+
+
+def episode_encodings(params, x, edges, edge_feat, b_path, t_path):
+    """Once-per-episode encodings: GNN pass, path embeddings, static SEL
+    logits (SEL's inputs are all static, so its logits are too — only the
+    candidate mask evolves during the episode)."""
+    H = apply_gnn(params["gnn"], x, edges, edge_feat)
+    h_b = path_embedding(H, b_path)
+    h_t = path_embedding(H, t_path)
+    z_sel = apply_mlp(params["sel_z"], x)
+    sel_in = jnp.concatenate([H, h_b, h_t, z_sel], axis=-1)
+    sel_logits = apply_mlp(params["sel_head"], sel_in)[:, 0]
+    z_plc = apply_mlp(params["plc_z"], x)
+    return H, sel_logits, z_plc
+
+
+def plc_logits(params, h_v, h_dev, x_dev, z_v):
+    """Per-step device logits.  h_v: (dh,), h_dev: (nd, dh) mean embedding of
+    placed nodes per device, x_dev: (nd, 5) dynamic features, z_v: (dz,)."""
+    nd = h_dev.shape[0]
+    y = apply_mlp(params["plc_y"], x_dev)                       # (nd, dy)
+    hv = jnp.broadcast_to(h_v[None, :], (nd, h_v.shape[0]))
+    zv = jnp.broadcast_to(z_v[None, :], (nd, z_v.shape[0]))
+    inp = jnp.concatenate([hv, h_dev, y, zv], axis=-1)
+    hid = leaky_relu(apply_mlp(params["plc_head1"], inp))
+    return apply_mlp(params["plc_head2"], hid)[:, 0]            # (nd,)

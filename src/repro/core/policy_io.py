@@ -1,0 +1,50 @@
+"""DOPPLER policy checkpointing: save/restore the dual-policy parameters
+plus trainer state (reward statistics, episode counter) so Stage III can
+resume in production and policies can be shipped between hosts
+(the Table-4 transfer protocol needs exactly this)."""
+from __future__ import annotations
+
+import pathlib
+
+from ..train.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def save_policy(ckpt_dir: str | pathlib.Path, trainer) -> pathlib.Path:
+    extra = {
+        "episode": trainer.episode,
+        "r_sum": trainer._r_sum,
+        "r_sqsum": trainer._r_sqsum,
+        "r_count": trainer._r_count,
+        "best_time": (float(trainer.best_time)
+                      if trainer.best_time != float("inf") else None),
+        "best_assignment": (trainer.best_assignment.tolist()
+                            if trainer.best_assignment is not None else None),
+        "sel_mode": trainer.sel_mode,
+        "plc_mode": trainer.plc_mode,
+    }
+    return save_checkpoint(ckpt_dir, trainer.episode,
+                           (trainer.params, trainer.opt_state), extra=extra)
+
+
+def load_policy(ckpt_dir: str | pathlib.Path, trainer, step: int | None = None):
+    """Restore params/opt/reward-stats into an existing trainer (built for
+    the target graph/devices — transfer is just building the trainer on a
+    different graph first)."""
+    import numpy as np
+    from ..train.checkpoint import latest_step
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    (params, opt_state), extra = restore_checkpoint(
+        ckpt_dir, step, (trainer.params, trainer.opt_state))
+    trainer.params = params
+    trainer.opt_state = opt_state
+    trainer.episode = int(extra["episode"])
+    trainer._r_sum = float(extra["r_sum"])
+    trainer._r_sqsum = float(extra["r_sqsum"])
+    trainer._r_count = int(extra["r_count"])
+    if extra.get("best_time") is not None:
+        trainer.best_time = float(extra["best_time"])
+    if extra.get("best_assignment") is not None:
+        trainer.best_assignment = np.asarray(extra["best_assignment"])
+    return trainer

@@ -1,0 +1,352 @@
+"""DOPPLER three-stage training (paper §5).
+
+Stage I   imitation of the CRITICAL-PATH teacher (Eq. 9)
+Stage II  REINFORCE against the WC digital-twin simulator (Eq. 10)
+Stage III REINFORCE against the real system (same objective, rewards from
+          observed wall-clock of a real WC executor)
+
+Policy-gradient details per §6.1: lr 1e-4 linearly decayed to 1e-7,
+exploration eps 0.2 linearly decayed to 0, entropy weight 1e-2, baseline =
+running mean of all previous episode rewards (§4.1).  Advantage
+normalization by the running reward std is an addition for stability
+(recorded in DESIGN.md §10) and can be disabled.
+
+`FleetTrainer` at the bottom implements Appendix I's scale-out recipe: one
+policy per unique (repeated) block graph, the assignment replicated across
+data-parallel replicas/pods, with rewards aggregated across the fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train.optim import AdamState, adamw_init, adamw_update, linear_schedule
+from .assign import GraphData, build_graph_data, rollout, rollout_batch
+from .devices import DeviceModel
+from .graph import DataflowGraph
+from .heuristics import critical_path_assignment
+from .policies import init_policies
+from .simulator import WCSimulator
+
+
+# ------------------------------------------------------------------ losses
+@partial(jax.jit, static_argnames=("sel_learned", "plc_learned"))
+def _pg_loss_and_grad(params, gd: GraphData, key, actions, advantage,
+                      entropy_w, sel_learned: bool = True,
+                      plc_learned: bool = True):
+    def loss_fn(p):
+        out = rollout(p, gd, key, jnp.float32(0.0), actions,
+                      jnp.array(True), greedy=False)
+        logp = 0.0
+        ent = 0.0
+        if sel_learned:
+            logp = logp + out["sel_logp"].sum()
+            ent = ent + out["sel_ent"].mean()
+        if plc_learned:
+            logp = logp + out["plc_logp"].sum()
+            ent = ent + out["plc_ent"].mean()
+        return -(advantage * logp + entropy_w * ent)
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+@jax.jit
+def _pg_loss_and_grad_batch(params, gd: GraphData, keys, actions,
+                            advantages, entropy_w):
+    """Batch-averaged REINFORCE: K replayed episodes, one gradient."""
+    def loss_fn(p):
+        def one(key, act, adv):
+            out = rollout(p, gd, key, jnp.float32(0.0), act,
+                          jnp.array(True), greedy=False)
+            logp = out["sel_logp"].sum() + out["plc_logp"].sum()
+            ent = out["sel_ent"].mean() + out["plc_ent"].mean()
+            return -(adv * logp + entropy_w * ent)
+
+        return jax.vmap(one)(keys, actions, advantages).mean()
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+@jax.jit
+def _imitation_loss_and_grad(params, gd: GraphData, key, teacher_actions):
+    def loss_fn(p):
+        out = rollout(p, gd, key, jnp.float32(0.0), teacher_actions,
+                      jnp.array(True), greedy=False)
+        return -(out["sel_logp"].mean() + out["plc_logp"].mean())
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+# ----------------------------------------------------------------- trainer
+@dataclasses.dataclass
+class EpisodeRecord:
+    episode: int
+    stage: str
+    exec_time: float
+    best_so_far: float
+
+
+class DopplerTrainer:
+    """Owns the dual-policy parameters and runs the three stages."""
+
+    def __init__(self, graph: DataflowGraph, dev: DeviceModel, seed: int = 0,
+                 d_hidden: int = 64, gnn_layers: int = 2,
+                 lr0: float = 1e-4, lr1: float = 1e-7,
+                 eps0: float = 0.2, eps1: float = 0.0,
+                 entropy_weight: float = 1e-2,
+                 total_episodes: int = 4000,
+                 normalize_adv: bool = True,
+                 comm_factor: float = 4.0,
+                 sel_mode: str = "learned", plc_mode: str = "learned"):
+        self.g, self.dev = graph, dev
+        self.gd = build_graph_data(graph, dev, comm_factor)
+        key = jax.random.PRNGKey(seed)
+        self.key, pkey = jax.random.split(key)
+        self.params = init_policies(pkey, d_hidden=d_hidden,
+                                    gnn_layers=gnn_layers)
+        self.opt_state: AdamState = adamw_init(self.params)
+        self.lr_sched = linear_schedule(lr0, lr1, total_episodes)
+        self.eps_sched = linear_schedule(eps0, eps1, total_episodes)
+        self.entropy_weight = entropy_weight
+        self.total_episodes = total_episodes
+        self.normalize_adv = normalize_adv
+        # Table-3 ablation modes: 'learned' | 'cp' (SEL) / 'etf' (PLC)
+        self.sel_mode, self.plc_mode = sel_mode, plc_mode
+        # running reward statistics (baseline = mean of past rewards, §4.1)
+        self._r_sum = 0.0
+        self._r_sqsum = 0.0
+        self._r_count = 0
+        self.episode = 0
+        self.history: list[EpisodeRecord] = []
+        self.best_assignment: np.ndarray | None = None
+        self.best_time = np.inf
+        self._dummy_actions = jnp.zeros((graph.n, 2), jnp.int32)
+
+    # ------------------------------------------------------------- utils
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _baseline(self) -> tuple[float, float]:
+        if self._r_count == 0:
+            return 0.0, 1.0
+        mean = self._r_sum / self._r_count
+        var = max(self._r_sqsum / self._r_count - mean * mean, 1e-12)
+        return mean, float(np.sqrt(var))
+
+    def _update_reward_stats(self, r: float):
+        self._r_sum += r
+        self._r_sqsum += r * r
+        self._r_count += 1
+
+    def sample_assignment(self, eps: float | None = None):
+        eps = self.eps_sched(self.episode) if eps is None else eps
+        out = rollout(self.params, self.gd, self._next_key(),
+                      jnp.float32(eps), self._dummy_actions,
+                      jnp.array(False), greedy=False,
+                      sel_mode=self.sel_mode, plc_mode=self.plc_mode)
+        return np.asarray(out["assignment"]), np.asarray(out["actions"])
+
+    def greedy_assignment(self) -> np.ndarray:
+        out = rollout(self.params, self.gd, self._next_key(),
+                      jnp.float32(0.0), self._dummy_actions,
+                      jnp.array(False), greedy=True,
+                      sel_mode=self.sel_mode, plc_mode=self.plc_mode)
+        return np.asarray(out["assignment"])
+
+    def _apply_grads(self, grads):
+        lr = self.lr_sched(self.episode)
+        self.params, self.opt_state = adamw_update(
+            grads, self.opt_state, self.params, lr)
+
+    # ----------------------------------------------------------- Stage I
+    def stage1_imitation(self, n_episodes: int, seed: int = 0,
+                         log_every: int = 0) -> list[float]:
+        """Teach SEL+PLC to replicate CRITICAL PATH decisions (Eq. 9)."""
+        losses = []
+        for i in range(n_episodes):
+            _, acts = critical_path_assignment(self.g, self.dev,
+                                               seed=seed + i,
+                                               return_actions=True)
+            loss, grads = _imitation_loss_and_grad(
+                self.params, self.gd, self._next_key(), jnp.asarray(acts))
+            self._apply_grads(grads)
+            self.episode += 1
+            losses.append(float(loss))
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[stage1] ep {i+1}/{n_episodes} nll={loss:.4f}")
+        return losses
+
+    # ------------------------------------------------------ Stage II/III
+    def _rl_episode(self, exec_time_fn: Callable[[np.ndarray], float],
+                    stage: str, sel_learned=None, plc_learned=None):
+        if sel_learned is None:
+            sel_learned = self.sel_mode == "learned"
+        if plc_learned is None:
+            plc_learned = self.plc_mode == "learned"
+        assignment, actions = self.sample_assignment()
+        t = float(exec_time_fn(assignment))
+        r = -t                                   # reward = -ExecTime (§4.1)
+        mean, std = self._baseline()
+        adv = r - mean
+        if self.normalize_adv:
+            adv = adv / (std + 1e-9)
+        self._update_reward_stats(r)
+        _, grads = _pg_loss_and_grad(
+            self.params, self.gd, self._next_key(), jnp.asarray(actions),
+            jnp.float32(adv), jnp.float32(self.entropy_weight),
+            sel_learned=sel_learned, plc_learned=plc_learned)
+        self._apply_grads(grads)
+        self.episode += 1
+        if t < self.best_time:
+            self.best_time, self.best_assignment = t, assignment
+        self.history.append(EpisodeRecord(self.episode, stage, t,
+                                          self.best_time))
+        return t
+
+    def stage2_sim(self, n_episodes: int, sim: WCSimulator | None = None,
+                   log_every: int = 0, **ablation) -> list[float]:
+        sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
+                                 noise_sigma=0.05)
+        times = []
+        for i in range(n_episodes):
+            t = self._rl_episode(lambda a: sim.exec_time(a, seed=self.episode),
+                                 "sim", **ablation)
+            times.append(t)
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[stage2] ep {i+1}/{n_episodes} t={t*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return times
+
+    def stage2_sim_batched(self, n_updates: int, sim: WCSimulator | None = None,
+                           batch_size: int = 8, log_every: int = 0):
+        """Population variant of Stage II: sample `batch_size` episodes in
+        ONE vmapped rollout, evaluate their rewards, and take one
+        batch-averaged REINFORCE step.  Same total-episode budget as
+        `stage2_sim(n_updates * batch_size)` with ~batch_size x fewer XLA
+        dispatches and a lower-variance gradient (the batch itself acts as
+        a per-update baseline)."""
+        sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
+                                 noise_sigma=0.05)
+        times = []
+        for i in range(n_updates):
+            eps = self.eps_sched(self.episode)
+            keys = jax.random.split(self._next_key(), batch_size)
+            out = rollout_batch(self.params, self.gd, keys,
+                                jnp.float32(eps),
+                                sel_mode=self.sel_mode,
+                                plc_mode=self.plc_mode)
+            assigns = np.asarray(out["assignment"])
+            ts = np.array([sim.exec_time(assigns[k],
+                                         seed=self.episode * batch_size + k)
+                           for k in range(batch_size)])
+            rs = -ts
+            mean, std = self._baseline()
+            advs = rs - (mean if self._r_count else rs.mean())
+            if self.normalize_adv:
+                advs = advs / (max(std, float(rs.std())) + 1e-9)
+            for r in rs:
+                self._update_reward_stats(float(r))
+            _, grads = _pg_loss_and_grad_batch(
+                self.params, self.gd, keys, out["actions"],
+                jnp.asarray(advs, jnp.float32),
+                jnp.float32(self.entropy_weight))
+            self._apply_grads(grads)
+            self.episode += batch_size
+            best_k = int(ts.argmin())
+            if ts[best_k] < self.best_time:
+                self.best_time = float(ts[best_k])
+                self.best_assignment = assigns[best_k]
+            self.history.append(EpisodeRecord(self.episode, "sim_batch",
+                                              float(ts.mean()),
+                                              self.best_time))
+            times.extend(ts.tolist())
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[stage2b] upd {i+1}/{n_updates} "
+                      f"mean={ts.mean()*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return times
+
+    def stage3_system(self, n_episodes: int,
+                      system_exec_time: Callable[[np.ndarray], float],
+                      log_every: int = 0, **ablation) -> list[float]:
+        """Online refinement against the real WC executor: the reward is the
+        observed wall-clock of serving real requests ("for free", §5)."""
+        times = []
+        for i in range(n_episodes):
+            t = self._rl_episode(system_exec_time, "sys", **ablation)
+            times.append(t)
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[stage3] ep {i+1}/{n_episodes} t={t*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return times
+
+    # -------------------------------------------------------- evaluation
+    def evaluate(self, sim_or_fn, n_runs: int = 10,
+                 assignment: np.ndarray | None = None):
+        """Paper protocol: mean +/- std of `n_runs` executions of the best
+        found assignment."""
+        a = assignment if assignment is not None else self.best_assignment
+        if a is None:
+            a = self.greedy_assignment()
+        if isinstance(sim_or_fn, WCSimulator):
+            ts = [sim_or_fn.exec_time(a, seed=1000 + i) for i in range(n_runs)]
+        else:
+            ts = [sim_or_fn(a) for i in range(n_runs)]
+        return float(np.mean(ts)), float(np.std(ts)), a
+
+
+# --------------------------------------------------------------- transfer
+def transfer(trainer: DopplerTrainer, target_graph: DataflowGraph,
+             dev: DeviceModel, **kwargs) -> DopplerTrainer:
+    """Few-shot transfer (Table 4 / App. J): carry the policy parameters to
+    a new graph and/or device model; the caller then runs k-shot episodes."""
+    new = DopplerTrainer(target_graph, dev, **kwargs)
+    new.params = trainer.params
+    new.opt_state = adamw_init(new.params)
+    return new
+
+
+# ------------------------------------------------------------------ fleet
+class FleetTrainer:
+    """Appendix I: at 1000+-node scale the dataflow graph of each *repeated*
+    block/layer is assigned once and replicated across every data-parallel
+    replica in the fleet (uniform hardware).  Each unique block graph gets
+    its own DopplerTrainer; per-episode rewards are aggregated (mean) over
+    the replica measurements — here simulated as independently-seeded noisy
+    WC runs, in production the wall-clocks collected across the cluster."""
+
+    def __init__(self, block_graphs: dict[str, DataflowGraph],
+                 dev: DeviceModel, n_replicas: int = 8, seed: int = 0,
+                 noise_sigma: float = 0.1, **trainer_kwargs):
+        self.n_replicas = n_replicas
+        self.trainers = {
+            name: DopplerTrainer(g, dev, seed=seed + i, **trainer_kwargs)
+            for i, (name, g) in enumerate(block_graphs.items())}
+        self.sims = {name: WCSimulator(g, dev, choose="fifo",
+                                       noise_sigma=noise_sigma)
+                     for name, g in block_graphs.items()}
+
+    def fleet_exec_time(self, name: str, assignment, episode: int) -> float:
+        """Mean exec time of the replicated assignment across the fleet."""
+        sim = self.sims[name]
+        ts = [sim.exec_time(assignment, seed=episode * self.n_replicas + r)
+              for r in range(self.n_replicas)]
+        return float(np.mean(ts))
+
+    def train(self, n_episodes: int, log_every: int = 0):
+        for name, tr in self.trainers.items():
+            for _ in range(n_episodes):
+                tr._rl_episode(
+                    lambda a: self.fleet_exec_time(name, a, tr.episode),
+                    "fleet")
+            if log_every:
+                print(f"[fleet] {name}: best={tr.best_time*1e3:.2f}ms")
+
+    def assignments(self) -> dict[str, np.ndarray]:
+        return {n: t.best_assignment for n, t in self.trainers.items()}

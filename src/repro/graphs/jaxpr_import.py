@@ -1,0 +1,175 @@
+"""jaxpr -> DataflowGraph importer.
+
+Bridges the pjit model zoo and the DOPPLER assignment stack (DESIGN.md §3):
+trace any JAX function (e.g. one transformer layer's forward from
+repro/models) and obtain a DataflowGraph whose vertices carry FLOP/byte
+costs estimated from the equation primitives.  The resulting graph is what
+DOPPLER assigns at the block level; per Appendix I, the per-block
+assignment is replicated across the repeated structure of the full model.
+
+Cost model (per primitive):
+  dot_general / conv:  2 * prod(contract dims) * prod(batch/free dims)
+  reductions:          input size
+  elementwise & rest:  output size
+Bytes: output nbytes (dtype-aware).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..core.graph import DataflowGraph
+
+_ELEMWISE_HINT = ("add", "sub", "mul", "div", "exp", "log", "tanh", "logistic",
+                  "max", "min", "pow", "rsqrt", "sqrt", "neg", "erf",
+                  "integer_pow", "select_n", "convert_element_type",
+                  "custom_jvp_call", "stop_gradient")
+
+_KIND_MAP = {
+    "dot_general": "matmul",
+    "conv_general_dilated": "matmul",
+    "reduce_sum": "sum_reduction",
+    "reduce_max": "max_reduction",
+    "reduce_min": "min_reduction",
+    "reduce_prod": "product_reduction",
+    "argmax": "max_reduction",
+    "reshape": "squeezer",
+    "squeeze": "squeezer",
+    "broadcast_in_dim": "squeezer",
+    "transpose": "squeezer",
+    "concatenate": "select",
+    "slice": "select",
+    "dynamic_slice": "select",
+    "gather": "select",
+    "scatter": "select",
+    "scatter_add": "select",
+    "iota": "fill",
+    "cumsum": "sum_reduction",
+    "cumlogsumexp": "sum_reduction",
+}
+
+
+def _out_size_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64)
+                     * np.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+def _flops_of(eqn) -> float:
+    prim = eqn.primitive.name
+    out_aval = eqn.outvars[0].aval
+    out_elems = float(np.prod(out_aval.shape, dtype=np.float64)) \
+        if out_aval.shape else 1.0
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, rc), _ = dims
+        lhs = eqn.invars[0].aval
+        contract = float(np.prod([lhs.shape[i] for i in lc],
+                                 dtype=np.float64)) if lc else 1.0
+        return 2.0 * out_elems * contract
+    if prim.startswith("reduce") or prim.startswith("cum"):
+        in_aval = eqn.invars[0].aval
+        return float(np.prod(in_aval.shape, dtype=np.float64)) \
+            if in_aval.shape else 1.0
+    return out_elems
+
+
+def _kind_of(eqn) -> str:
+    prim = eqn.primitive.name
+    if prim in _KIND_MAP:
+        return _KIND_MAP[prim]
+    if any(h in prim for h in _ELEMWISE_HINT):
+        return "straight_elemwise"
+    return "input_elemwise"
+
+
+def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
+                   fuse_cheap: bool = True,
+                   cheap_flops: float = 1e4) -> DataflowGraph:
+    """Trace `fn` on example args (arrays or ShapeDtypeStructs) and import
+    the closed jaxpr as a DataflowGraph.
+
+    fuse_cheap: absorb near-zero-cost vertices (reshapes, tiny scalars) into
+    their consumer — keeps the assignment problem at kernel granularity,
+    matching the paper's graphs (which are kernel calls, not HLO
+    minutiae)."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = closed.jaxpr
+    g = DataflowGraph(name)
+    producer: dict = {}
+
+    def ensure_const_input(var, lbl):
+        if var not in producer:
+            producer[var] = g.add_vertex(
+                "input", out_bytes=_out_size_bytes(var.aval), label=lbl,
+                out_shape=tuple(var.aval.shape))
+        return producer[var]
+
+    for i, var in enumerate(jaxpr.invars):
+        producer[var] = g.add_vertex(
+            "input", out_bytes=_out_size_bytes(var.aval), label=f"arg{i}",
+            out_shape=tuple(var.aval.shape))
+    for i, var in enumerate(jaxpr.constvars):
+        producer[var] = g.add_vertex(
+            "input", out_bytes=_out_size_bytes(var.aval), label=f"const{i}",
+            out_shape=tuple(var.aval.shape))
+
+    meta = 0
+    for eqn in jaxpr.eqns:
+        kind = _kind_of(eqn)
+        flops = _flops_of(eqn)
+        out_bytes = sum(_out_size_bytes(ov.aval) for ov in eqn.outvars)
+        v = g.add_vertex(kind, flops=flops, out_bytes=out_bytes,
+                         meta_op=meta, role="shard",
+                         label=eqn.primitive.name,
+                         out_shape=tuple(eqn.outvars[0].aval.shape))
+        meta += 1
+        for iv in eqn.invars:
+            if hasattr(iv, "val"):          # literal
+                continue
+            src = producer.get(iv)
+            if src is None:
+                src = ensure_const_input(iv, "captured")
+            g.add_edge(src, v)
+        for ov in eqn.outvars:
+            producer[ov] = v
+
+    g.freeze()
+    if fuse_cheap:
+        g = _fuse_cheap(g, cheap_flops)
+    return g
+
+
+def _fuse_cheap(g: DataflowGraph, cheap_flops: float) -> DataflowGraph:
+    """Collapse vertices with negligible cost and exactly one consumer into
+    that consumer (kernel-granularity view)."""
+    absorb_into = {}
+    for v in g.topo_order:
+        vert = g.vertices[v]
+        if vert.kind == "input":
+            continue
+        if vert.flops <= cheap_flops and len(g.succs[v]) == 1:
+            absorb_into[v] = g.succs[v][0]
+
+    def root(v):
+        while v in absorb_into:
+            v = absorb_into[v]
+        return v
+
+    keep = [v for v in range(g.n) if v not in absorb_into]
+    remap = {v: i for i, v in enumerate(keep)}
+    out = DataflowGraph(g.name)
+    for v in keep:
+        vert = g.vertices[v]
+        out.add_vertex(vert.kind, vert.flops, vert.out_bytes, vert.meta_op,
+                       vert.role, vert.label, vert.out_shape)
+    edges = set()
+    for (s, d) in g.edges:
+        rs, rd = root(s), root(d)
+        if rs != rd:
+            edges.add((remap[rs], remap[rd]))
+    for (s, d) in sorted(edges):
+        out.add_edge(s, d)
+    return out.freeze()

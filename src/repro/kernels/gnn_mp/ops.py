@@ -1,0 +1,54 @@
+"""Public wrapper: segment-sum over edge messages via the blocked kernel.
+
+`segment_sum_mp(msg, dst, n)` == jax.ops.segment_sum(msg, dst, n) but
+restructured for the MXU (see kernel.py).  The one-hot assignment build is
+pure XLA (sort + compare), done once per episode alongside the GNN pass.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_aggregate_blocked
+
+
+def _pad_to(x, size, axis=0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("n", "node_block", "edge_tile",
+                                   "interpret"))
+def segment_sum_mp(msg, dst, *, n: int, node_block: int = 128,
+                   edge_tile: int = 128, interpret: bool | None = None):
+    """msg: (m, d) edge messages; dst: (m,) destination node ids.
+    Returns (n, d) with out[v] = sum over edges with dst==v."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, d = msg.shape
+    order = jnp.argsort(dst)
+    msg_s = msg[order]
+    dst_s = dst[order]
+
+    n_pad = ((n + node_block - 1) // node_block) * node_block
+    m_pad = ((m + edge_tile - 1) // edge_tile) * edge_tile
+    msg_s = _pad_to(msg_s, m_pad)
+    dst_s = _pad_to(dst_s, m_pad).at[m:].set(n_pad)     # park pads off-range
+
+    nb = n_pad // node_block
+    nt = m_pad // edge_tile
+    # one-hot assignment per (node block, edge tile):
+    # A[b, t, i, e] = 1 iff dst of edge (t, e) == node (b, i)
+    dst_tiles = dst_s.reshape(nt, edge_tile)            # (nt, Eb)
+    node_ids = (jnp.arange(n_pad).reshape(nb, node_block))
+    assign = (dst_tiles[None, :, None, :] ==
+              node_ids[:, None, :, None]).astype(msg.dtype)
+    out = segment_aggregate_blocked(assign, msg_s.reshape(nt, edge_tile, d),
+                                    interpret=interpret)
+    return out.reshape(n_pad, d)[:n]

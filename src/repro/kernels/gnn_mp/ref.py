@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked message-aggregation kernel."""
+from __future__ import annotations
+
+import jax
+
+
+def segment_sum_ref(msg, dst, n: int):
+    return jax.ops.segment_sum(msg, dst, num_segments=n)

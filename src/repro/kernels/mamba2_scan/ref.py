@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: the models/ssm.py chunked-GLA core, reshaped to the
+kernel's (BH, S, ...) layout."""
+from __future__ import annotations
+
+from ...models.ssm import chunked_gla
+
+
+def gla_ref(q, k, v, log_a, chunk: int = 128):
+    """q, k: (BH, S, N); v: (BH, S, P); log_a: (BH, S) -> y (BH, S, P)."""
+    # chunked_gla wants (B, S, H, ...): use B=1, H=BH
+    y, _ = chunked_gla(q.transpose(1, 0, 2)[None],
+                       k.transpose(1, 0, 2)[None],
+                       v.transpose(1, 0, 2)[None],
+                       log_a.T[None], chunk)
+    return y[0].transpose(1, 0, 2).astype(v.dtype)

@@ -1,0 +1,92 @@
+"""DOPPLER policy-training CLI — the paper's pipeline as a launcher.
+
+  PYTHONPATH=src python -m repro.launch.doppler_train \
+      --graph ffnn --devices p100x4 \
+      --stage1 200 --stage2 2000 --stage3 500 \
+      --ckpt-dir runs/ffnn --trace runs/ffnn/schedule.json
+
+Stages map to the paper's §5; --resume restores policy + reward stats
+(Stage III production resumption).  --trace writes a Perfetto schedule of
+the best assignment (Appendix-A-style utilization analysis).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from ..core.devices import get_device_model
+from ..core.enumopt import enumerative_assignment
+from ..core.heuristics import best_critical_path
+from ..core.policy_io import load_policy, save_policy
+from ..core.simulator import WCSimulator
+from ..core.trace import utilization_ascii, write_chrome_trace
+from ..core.training import DopplerTrainer
+from ..graphs.workloads import get_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", required=True,
+                    help="chainmm|ffnn|llama_block|llama_layer")
+    ap.add_argument("--devices", default="p100x4")
+    ap.add_argument("--stage1", type=int, default=100)
+    ap.add_argument("--stage2", type=int, default=1000)
+    ap.add_argument("--stage3", type=int, default=200)
+    ap.add_argument("--lr0", type=float, default=3e-3)
+    ap.add_argument("--lr1", type=float, default=1e-5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--sel-mode", default="learned",
+                    choices=["learned", "cp"])
+    ap.add_argument("--plc-mode", default="learned",
+                    choices=["learned", "etf"])
+    args = ap.parse_args()
+
+    g = get_workload(args.graph)
+    dev = get_device_model(args.devices)
+    total = args.stage1 + args.stage2 + args.stage3
+    trainer = DopplerTrainer(g, dev, seed=args.seed, total_episodes=total,
+                             lr0=args.lr0, lr1=args.lr1,
+                             sel_mode=args.sel_mode, plc_mode=args.plc_mode)
+    if args.resume and args.ckpt_dir:
+        load_policy(args.ckpt_dir, trainer)
+        print(f"resumed at episode {trainer.episode}")
+
+    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.03)
+    real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+
+    cp_a, cp_t = best_critical_path(g, dev,
+                                    lambda a: sim.exec_time(a, seed=0),
+                                    n_trials=30)
+    print(f"{args.graph} on {args.devices}: CP={cp_t*1e3:.2f}ms "
+          f"EnumOpt={sim.exec_time(enumerative_assignment(g, dev))*1e3:.2f}ms")
+
+    if args.stage1:
+        nll = trainer.stage1_imitation(args.stage1)
+        print(f"stage I : imitation NLL {nll[0]:.3f} -> {nll[-1]:.3f}")
+    if args.stage2:
+        trainer.stage2_sim(args.stage2, sim,
+                           log_every=max(args.stage2 // 5, 1))
+    if args.stage3:
+        trainer.stage3_system(
+            args.stage3, lambda a: real.exec_time(a, seed=trainer.episode),
+            log_every=max(args.stage3 // 5, 1))
+
+    mean, std, a = trainer.evaluate(real)
+    print(f"DOPPLER best: {mean*1e3:.2f} +- {std*1e3:.2f} ms "
+          f"({100*(1 - mean/cp_t):+.1f}% vs CP)")
+    res = real.run(a, record=True)
+    print(utilization_ascii(res))
+    if args.ckpt_dir:
+        path = save_policy(args.ckpt_dir, trainer)
+        print(f"policy saved: {path}")
+    if args.trace:
+        write_chrome_trace(args.trace, res, g)
+        print(f"perfetto trace: {args.trace}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first backend init, and the production meshes
+need 512 placeholder host devices (16x16 single pod, 2x16x16 multi-pod).
+
+For each cell this:
+  1. builds the production mesh (launch.mesh.make_production_mesh),
+  2. builds ShapeDtypeStruct inputs (models.steps.input_specs) + param/opt/
+     state structs (eval_shape — nothing is allocated),
+  3. jits the train/prefill/decode step with explicit in/out shardings,
+  4. .lower().compile()s it, and records memory_analysis() (proves the
+     cell fits 16 GB/chip) + cost_analysis() + collective-byte totals
+     parsed from the post-SPMD HLO (launch.hlo_analysis) for §Roofline.
+
+Results are cached to results/dryrun/<cell>.json so the sweep is
+restartable.  Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCH_IDS, SHAPES, cell_supported, get_config
+from ..models.steps import (decode_state_structs, input_specs,
+                            make_decode_step, make_prefill_step,
+                            make_train_step, param_structs)
+from ..parallel.sharding import (data_specs, decode_state_specs, opt_specs,
+                                 param_specs)
+from ..train.optim import AdamState
+from .hlo_analysis import model_flops, roofline_terms
+from .hlo_static import analyze_hlo
+from .mesh import HW_V5E, make_production_mesh
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _adam_structs(pstructs):
+    zeros = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), pstructs)
+    return AdamState(jax.ShapeDtypeStruct((), jnp.int32), zeros,
+                     jax.tree_util.tree_map(
+                         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                         zeros))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch = input_specs(cfg, cell.seq_len, cell.global_batch, cell.kind)
+    pstructs = param_structs(cfg)
+    pspecs = param_specs(pstructs, mesh, cfg)
+    bspecs = data_specs(batch, mesh)
+
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            ostructs = _adam_structs(pstructs)
+            ospecs = opt_specs(ostructs, pspecs)
+            step = make_train_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(pspecs, ospecs, bspecs, None),
+                             out_shardings=(pspecs, ospecs, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pstructs, ostructs, batch,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        elif cell.kind == "prefill":
+            sstructs = decode_state_structs(cfg, cell.global_batch,
+                                            cell.seq_len)
+            sspecs = decode_state_specs(sstructs, mesh, cfg)
+            step = make_prefill_step(cfg, cell.seq_len)
+            jitted = jax.jit(step, in_shardings=(pspecs, bspecs, sspecs),
+                             out_shardings=(None, sspecs),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(pstructs, batch, sstructs)
+        else:  # decode
+            sstructs = decode_state_structs(cfg, cell.global_batch,
+                                            cell.seq_len)
+            sspecs = decode_state_specs(sstructs, mesh, cfg)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(pspecs, bspecs, sspecs, None),
+                             out_shardings=(None, sspecs),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(pstructs, batch, sstructs,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    meta = {"arch": arch, "shape": shape_name, "kind": cell.kind,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": 512 if multi_pod else 256, "config": cfg.name}
+    return cfg, cell, lowered, compiled, meta
+
+
+def analyse(cfg, cell, lowered, compiled, meta) -> dict:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    n_chips = meta["n_chips"]
+    # Static HLO walk with while-trip multipliers (hlo_static.py):
+    # cost_analysis() counts scan bodies once, which under-reports a
+    # scanned L-layer model by ~L x.
+    stat = analyze_hlo(hlo, n_devices=n_chips)
+    flops = stat["flops"]
+    bytes_acc = stat["mem_bytes"]
+    coll = {"total_bytes": stat["collective_bytes"],
+            "bytes": stat["collective_by_kind"],
+            "counts": stat["collective_counts"]}
+    terms = roofline_terms(flops, bytes_acc, coll["total_bytes"], n_chips,
+                           HW_V5E["peak_flops_bf16"], HW_V5E["hbm_bw"],
+                           HW_V5E["ici_bw"], per_device=True)
+    n_tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                    else 1)
+    mflops = model_flops(cfg, n_tokens, cell.kind)
+    mem_info = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_info[attr] = getattr(mem, attr)
+    result = {
+        **meta,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "xla_cost_analysis": {
+            "flops_scan_body_once": float(cost.get("flops", 0.0)),
+            "bytes_scan_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collective_bytes_per_device": coll["total_bytes"],
+        "collective_breakdown": coll["bytes"],
+        "collective_counts": coll["counts"],
+        "roofline": terms,
+        "model_flops_global": mflops,
+        "model_flops_per_device": mflops / n_chips,
+        "useful_flops_fraction":
+            (mflops / n_chips) / flops if flops > 0 else 0.0,
+        "memory_analysis": mem_info,
+        "tokens": n_tokens,
+    }
+    # roofline fraction: model-flops time at peak / bound time
+    ideal_s = (mflops / n_chips) / HW_V5E["peak_flops_bf16"]
+    result["ideal_compute_s"] = ideal_s
+    result["roofline_fraction"] = (
+        ideal_s / terms["bound_s"] if terms["bound_s"] > 0 else 0.0)
+    return result
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_tag}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        res = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "skipped": True, "reason": why}
+        out_path.write_text(json.dumps(res, indent=1))
+        return res
+    t0 = time.time()
+    cfg, cell, lowered, compiled, meta = lower_cell(arch, shape_name,
+                                                    multi_pod, overrides)
+    res = analyse(cfg, cell, lowered, compiled, meta)
+    res["compile_seconds"] = time.time() - t0
+    res["skipped"] = False
+    out_path.write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tagm = "multipod" if mp else "pod"
+                try:
+                    r = run_cell(arch, shape, mp, force=args.force)
+                    if r.get("skipped"):
+                        print(f"SKIP {arch} {shape} {tagm}: {r['reason']}")
+                    else:
+                        rf = r["roofline"]
+                        print(f"OK   {arch} {shape} {tagm} "
+                              f"dom={rf['dominant']} "
+                              f"bound={rf['bound_s']*1e3:.2f}ms "
+                              f"frac={r['roofline_fraction']:.3f} "
+                              f"({r.get('compile_seconds', 0):.0f}s)")
+                except Exception as e:
+                    failures.append((arch, shape, tagm, repr(e)))
+                    print(f"FAIL {arch} {shape} {tagm}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures")
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

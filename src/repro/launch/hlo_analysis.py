@@ -1,0 +1,86 @@
+"""HLO-text analysis: collective-byte accounting + roofline terms.
+
+cost_analysis() gives FLOPs and bytes-accessed but NOT collective traffic;
+we parse the (post-SPMD-partitioning) HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op, exactly as the brief specifies.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """'bf16[128,1024]{1,0}' -> byte size.  Tuple shapes: sum elements."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of OUTPUT-shape bytes per collective kind (per device, since the
+    HLO is the post-partitioning per-device module).  '-done' ops are
+    skipped so async start/done pairs count once."""
+    out = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        full = m.group(0)
+        if "-done(" in full:
+            continue
+        out[kind] += shape_bytes(shape_str)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, n_chips: int,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9, per_device: bool = True) -> dict:
+    """Three roofline terms in seconds.  If `per_device`, the inputs are
+    already per-chip (post-SPMD HLO) and are NOT divided by n_chips."""
+    div = 1.0 if per_device else float(n_chips)
+    t_compute = flops / div / peak_flops
+    t_memory = bytes_accessed / div / hbm_bw
+    t_collective = coll_bytes / div / ici_bw
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_collective), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_collective, "dominant": dominant,
+            "bound_s": max(t_compute, t_memory, t_collective)}
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
+    2*N*D for a forward-only step (prefill/decode)."""
+    n = cfg.active_params_per_token()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

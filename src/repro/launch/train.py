@@ -1,0 +1,108 @@
+"""Production training driver.
+
+Single-host usage (CPU smoke / tests):
+  PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+On a real pod the same driver runs under the production mesh
+(--mesh pod|multipod) with the full config; per-process device wiring
+comes from the TPU runtime (jax.distributed.initialize is a no-op here).
+The loop runs under the fault-tolerance supervisor: checkpoint every
+--ckpt-every steps, automatic restore + elastic mesh re-form on failure.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import get_config
+from ..models.steps import make_train_step
+from ..models.transformer import init_params
+from ..parallel.sharding import data_specs, opt_specs, param_specs
+from ..train.checkpoint import (latest_step, restore_checkpoint,
+                                save_checkpoint)
+from ..train.data import DataConfig, SyntheticTokenStream
+from ..train.optim import adamw_init, cosine_schedule
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-size variant of the arch (same family)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", choices=["host", "pod", "multipod"],
+                    default="host")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = {"host": lambda: make_host_mesh(1, 1),
+            "pod": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)
+            }[args.mesh]()
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state = adamw_init(params)
+    pspecs = param_specs(params, mesh, cfg)
+    ospecs = opt_specs(opt_state, pspecs)
+    sched = cosine_schedule(args.lr, args.lr * 0.1, args.steps,
+                            warmup=max(args.steps // 20, 1))
+    step_fn = make_train_step(cfg, lr_schedule=sched)
+
+    data = SyntheticTokenStream(cfg, DataConfig(args.seq, args.batch,
+                                                seed=args.seed))
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt_state), extra = restore_checkpoint(
+                args.ckpt_dir, last, (params, opt_state))
+            data.restore(extra["data"])
+            start = last + 1
+            print(f"resumed from step {last}")
+
+    sample = data.next_batch()
+    data.restore({"step": data.step - 1})
+    bspecs = data_specs(sample, mesh)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pspecs, ospecs, bspecs, None),
+                         out_shardings=(pspecs, ospecs, None),
+                         donate_argnums=(0, 1))
+        t_start = time.time()
+        for step in range(start, args.steps):
+            batch = data.next_batch()
+            params, opt_state, metrics = jitted(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({(time.time()-t_start)/max(step-start+1,1)*1e3:.0f}"
+                      f" ms/step)", flush=True)
+            if args.ckpt_dir and step and step % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step, (params, opt_state),
+                                extra={"data": data.state()})
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps - 1, (params, opt_state),
+                        extra={"data": data.state()})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Grouped-query attention: full, memory-chunked (flash-style scan over
+query blocks — the pure-XLA twin of kernels/flash_attention), and
+KV-cache decode.
+
+Two numerics modes:
+  * mixed=False (paper-faithful baseline): inputs upcast to fp32 before
+    the score/value einsums — simple, but materializes fp32 copies of
+    cache-sized tensors (the dominant decode HBM term, see EXPERIMENTS.md
+    §Perf iteration 1).
+  * mixed=True (optimized): einsum inputs stay bf16 with
+    preferred_element_type=fp32 — the MXU accumulates in fp32 natively,
+    softmax still runs in fp32, and no cache-sized fp32 temporaries exist.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _scores_softmax_out(q, k, v, mask, softcap: float = 0.0,
+                        mixed: bool = False):
+    """q: (B,C,Hkv,G,hd); k,v: (B,T,Hkv,hd); mask broadcastable to
+    (B,Hkv,G,C,T).  Returns (B,C,Hkv,G,hd)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if mixed:
+        s = jnp.einsum("bckgh,btkh->bkgct", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum("bckgh,btkh->bkgct", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if mixed:
+        out = jnp.einsum("bkgct,btkh->bckgh", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgct,btkh->bckgh", p, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                  softcap: float = 0.0, mixed: bool = False):
+    """Full-matrix GQA.  q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    if causal:
+        qpos = q_offset + jnp.arange(S)
+        mask = (qpos[:, None] >= jnp.arange(T)[None, :])[None, None, None]
+    else:
+        mask = jnp.ones((1, 1, 1, S, T), bool)
+    out = _scores_softmax_out(qg, k, v, mask, softcap, mixed)
+    return out.reshape(B, S, Hq, hd)
+
+
+def chunked_attention(q, k, v, *, chunk: int = 512, causal: bool = True,
+                      softcap: float = 0.0, mixed: bool = False):
+    """Flash-style scan over query chunks: peak memory O(chunk x T) rather
+    than O(S x T).  Used for train/prefill at long sequence length; the
+    Pallas kernel (kernels/flash_attention) is the TPU-tiled version of the
+    same computation."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if S <= chunk:
+        return gqa_attention(q, k, v, causal=causal, softcap=softcap,
+                             mixed=mixed)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    qg = q.reshape(B, n_chunks, chunk, Hkv, G, hd)
+    qg = jnp.moveaxis(qg, 1, 0)                     # (n, B, C, Hkv, G, hd)
+    kpos = jnp.arange(T)
+
+    def body(carry, inp):
+        i, qc = inp
+        qpos = i * chunk + jnp.arange(chunk)
+        if causal:
+            mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+        else:
+            mask = jnp.ones((1, 1, 1, chunk, T), bool)
+        out = _scores_softmax_out(qc, k, v, mask, softcap, mixed)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, (), (jnp.arange(n_chunks), qg))
+    outs = jnp.moveaxis(outs, 0, 1)                 # (B, n, C, Hkv, G, hd)
+    return outs.reshape(B, S, Hq, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, softcap: float = 0.0,
+                     mixed: bool = False):
+    """Single-step decode.  q: (B,1,Hq,hd); caches: (B,T,Hkv,hd); pos:
+    scalar index of the current token (attends to [0..pos])."""
+    B, _, Hq, hd = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    mask = (jnp.arange(T) <= pos)[None, None, None, None, :]
+    out = _scores_softmax_out(qg, k_cache, v_cache, mask, softcap, mixed)
+    return out.reshape(B, 1, Hq, hd)

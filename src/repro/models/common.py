@@ -1,0 +1,104 @@
+"""Shared model components: norms, RoPE, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    return (jax.random.normal(key, (d_in, d_out), dtype)
+            * np.sqrt(1.0 / d_in).astype(np.float32))
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def nonparametric_layernorm(x, eps: float = 1e-6):
+    """OLMo-style LayerNorm without learned scale/bias."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(kind: str, x, scale=None):
+    if kind == "nonparametric":
+        return nonparametric_layernorm(x)
+    return rms_norm(x, scale)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def gated_act(kind: str, gate, up):
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate) * up
+    raise ValueError(kind)
+
+
+def cast_block_params(p, dtype):
+    """Mixed-precision policy: matrices (ndim>=2) are cast to the compute
+    dtype at use; vectors/scalars (norm scales, gate biases, A_log, ...)
+    stay in their storage dtype (fp32) for numerical stability.  Applied
+    per-block inside the layer scan so only one layer's low-precision copy
+    is live at a time."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if (hasattr(x, "ndim") and x.ndim >= 2
+                                      and x.dtype == jnp.float32) else x, p)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """Mean token CE in fp32.  logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

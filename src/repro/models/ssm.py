@@ -1,0 +1,319 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM are both *gated linear attention*: a matrix state per head
+decayed by a scalar gate and rank-1-updated by k (x) v.  One chunked scan
+core (`chunked_gla`) serves both — quadratic intra-chunk einsums + a carried
+inter-chunk state, the standard SSD chunking, O(S * chunk) memory.  The
+Pallas kernel kernels/mamba2_scan is the TPU-tiled twin of this core.
+
+sLSTM keeps the exponential-gated scalar recurrence with the
+max-stabilizer, which is inherently sequential -> lax.scan over time.
+
+Decode-time (`*_step`) variants carry O(1) state, which is what makes
+long_500k feasible for xlstm/zamba2 (DESIGN.md §5).
+
+Simplifications vs the source papers (recorded in DESIGN.md §10): Mamba2's
+short conv is applied to the input branch only; mLSTM omits the per-step
+max-stabilizer in the chunked path (sigmoid log-decay + fp32 accumulation
+keep it stable); sLSTM uses per-head recurrent weights with a single
+projection block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.annotate import BATCH, constrain
+from .common import dense_init
+from .config import SSMConfig
+
+
+# ------------------------------------------------------ chunked GLA core
+def _chunk_gla(q, k, v, log_a, state):
+    """One chunk.  q,k: (B,L,H,N); v: (B,L,H,P); log_a: (B,L,H) <= 0;
+    state: (B,H,P,N).  Returns y: (B,L,H,P), new state."""
+    cum = jnp.cumsum(log_a, axis=1)                       # (B,L,H)
+    # decay matrix M[t,s] = exp(cum[t]-cum[s]) for s<=t (gate applied for
+    # r in (s, t]) -- lower-triangular
+    diff = cum[:, :, None, :] - cum[:, None, :, :]        # (B,L,L,H)
+    L = q.shape[1]
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    M = jnp.where(tri, jnp.exp(diff), 0.0)                # (B,L,L,H)
+    qk = jnp.einsum("blhn,bmhn->blmh", q, k)              # (B,L,L,H)
+    y_intra = jnp.einsum("blmh,bmhp->blhp", qk * M, v)
+    # inter-chunk: contribution of the carried state
+    P = jnp.exp(cum)                                      # (B,L,H)
+    y_inter = jnp.einsum("blhn,bhpn,blh->blhp", q, state, P)
+    # state update
+    tot = P[:, -1]                                        # (B,H)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,L,H)
+    state_new = (state * tot[:, :, None, None]
+                 + jnp.einsum("blh,blhp,blhn->bhpn", decay_to_end, v, k))
+    return y_intra + y_inter, state_new
+
+
+def chunked_gla(q, k, v, log_a, chunk: int, state=None):
+    """Full-sequence gated linear attention via scan over chunks.
+    Shapes as `_chunk_gla` with L = full seq; returns (y, final_state)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+    if S <= chunk:
+        return _chunk_gla(q, k, v, log_a, state)
+    if S % chunk:
+        # zero-pad to a chunk multiple: pads have k=v=0 (no state
+        # contribution) and log_a=0 (decay 1, state preserved)
+        pad = chunk - S % chunk
+        padded = [jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+                  for x in (q, k, v, log_a)]
+        y, st = chunked_gla(*padded, chunk, state)
+        return y[:, :S], st
+    n = S // chunk
+
+    def split(x):
+        return jnp.moveaxis(x.reshape(B, n, chunk, *x.shape[2:]), 1, 0)
+
+    def body(st, inp):
+        qc, kc, vc, ac = inp
+        y, st = _chunk_gla(qc, kc, vc, ac, st)
+        return st, y
+
+    state, ys = jax.lax.scan(body, state,
+                             (split(q), split(k), split(v), split(log_a)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y, state
+
+
+def gla_step(q, k, v, log_a, state):
+    """Single-token recurrence.  q,k: (B,H,N); v: (B,H,P); log_a: (B,H);
+    state: (B,H,P,N)."""
+    a = jnp.exp(log_a)[:, :, None, None]
+    state = state * a + jnp.einsum("bhp,bhn->bhpn", v, k)
+    y = jnp.einsum("bhn,bhpn->bhp", q, state)
+    return y, state
+
+
+# ----------------------------------------------------------------- Mamba2
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype):
+    di = cfg.expand * d_model
+    H, N = cfg.n_heads, cfg.state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], d_model, 2 * di + 2 * N + H, dtype),
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, di), dtype) * 0.2,
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(ks[2], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B,S,di); w: (W,di) depthwise causal conv."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out
+
+
+def mamba2_forward(params, x, cfg: SSMConfig, state=None,
+                   local_gla: bool = False):
+    """x: (B,S,D) -> (B,S,D).  state (optional): (B,H,P,N) carried SSD
+    state (+ conv tail), for chunk-streaming; None for training.
+
+    local_gla (§Perf): constrain the GLA inputs to batch x head sharding
+    so the chunk scan runs without per-iteration model-axis collectives
+    (heads shard over 'model' when divisible, else replicate)."""
+    B, S, D = x.shape
+    di = cfg.expand * D
+    H, N = cfg.n_heads, cfg.state_dim
+    P = di // H
+    proj = x @ params["w_in"]
+    z, xin, Bs, Cs, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xin = jax.nn.silu(_causal_conv(xin, params["conv"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])            # (B,S,H)
+    A = -jnp.exp(params["A_log"])                        # (H,) negative
+    log_a = dt * A                                       # (B,S,H), <= 0
+    u = xin.reshape(B, S, H, P).astype(jnp.float32) * dt[..., None]
+    kq = jnp.broadcast_to(Bs[:, :, None, :].astype(jnp.float32),
+                          (B, S, H, N))
+    qq = jnp.broadcast_to(Cs[:, :, None, :].astype(jnp.float32),
+                          (B, S, H, N))
+    if local_gla:
+        spec = (BATCH, None, "model", None)
+        u = constrain(u, *spec)
+        kq = constrain(kq, *spec)
+        qq = constrain(qq, *spec)
+        log_a = constrain(log_a, BATCH, None, "model")
+    y, st = chunked_gla(qq, kq, u, log_a, cfg.chunk, state)
+    y = y + params["D_skip"][None, None, :, None] \
+        * xin.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"], st
+
+
+def mamba2_step(params, x, cfg: SSMConfig, state, conv_tail):
+    """Decode one token.  x: (B,1,D); state: (B,H,P,N);
+    conv_tail: (B,W-1,di) previous conv inputs."""
+    B, _, D = x.shape
+    di = cfg.expand * D
+    H, N = cfg.n_heads, cfg.state_dim
+    P = di // H
+    proj = x[:, 0] @ params["w_in"]
+    z, xin, Bs, Cs, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    w = params["conv"]
+    hist = jnp.concatenate([conv_tail, xin[:, None, :]], axis=1)  # (B,W,di)
+    xin = jax.nn.silu(jnp.einsum("bwd,wd->bd", hist, w))
+    new_tail = hist[:, 1:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    log_a = dt * (-jnp.exp(params["A_log"]))
+    u = xin.reshape(B, H, P).astype(jnp.float32) * dt[..., None]
+    k = jnp.broadcast_to(Bs[:, None, :].astype(jnp.float32), (B, H, N))
+    q = jnp.broadcast_to(Cs[:, None, :].astype(jnp.float32), (B, H, N))
+    y, state = gla_step(q, k, u, log_a, state)
+    y = y + params["D_skip"][None, :, None] \
+        * xin.reshape(B, H, P).astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype) * jax.nn.silu(z)
+    return (y @ params["w_out"])[:, None, :], state, new_tail
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(key, d_model: int, cfg: SSMConfig, dtype):
+    di = cfg.expand * d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * di, dtype),   # x and z-gate
+        "w_q": dense_init(ks[1], di, di, dtype),
+        "w_k": dense_init(ks[2], di, di, dtype),
+        "w_v": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * H, dtype),         # i, f gates
+        "w_out": dense_init(ks[5], di, d_model, dtype),
+    }
+
+
+def _mlstm_core(params, xin, cfg, B, S, di, state, step: bool,
+                local_gla: bool = False):
+    H = cfg.n_heads
+    P = di // H
+    q = (xin @ params["w_q"]).reshape(B, S, H, P).astype(jnp.float32)
+    k = (xin @ params["w_k"]).reshape(B, S, H, P).astype(jnp.float32) \
+        / jnp.sqrt(float(P))
+    v = (xin @ params["w_v"]).reshape(B, S, H, P).astype(jnp.float32)
+    gates = (xin @ params["w_if"]).astype(jnp.float32).reshape(B, S, 2 * H)
+    if local_gla:
+        spec = (BATCH, None, "model", None)
+        q = constrain(q, *spec)
+        k = constrain(k, *spec)
+        v = constrain(v, *spec)
+        gates = constrain(gates, BATCH, None, None)
+    i_g = jnp.exp(jnp.clip(gates[..., :H], -10.0, 5.0))      # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])               # <= 0
+    # augment v with a ones channel to carry the normalizer n_t
+    v_aug = jnp.concatenate([v * i_g[..., None],
+                             i_g[..., None]], axis=-1)       # (B,S,H,P+1)
+    if step:
+        y_aug, state = gla_step(q[:, 0], k[:, 0], v_aug[:, 0],
+                                log_f[:, 0], state)
+        y_aug = y_aug[:, None]
+    else:
+        y_aug, state = chunked_gla(q, k, v_aug, log_f, cfg.chunk, state)
+    y, n = y_aug[..., :P], y_aug[..., P:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    return y.reshape(B, S, di), state
+
+
+def mlstm_forward(params, x, cfg: SSMConfig, state=None,
+                  local_gla: bool = False):
+    B, S, D = x.shape
+    di = cfg.expand * D
+    proj = x @ params["w_in"]
+    xin, z = jnp.split(proj, 2, axis=-1)
+    if state is None:
+        H = cfg.n_heads
+        P = di // H
+        state = jnp.zeros((B, H, P + 1, P), jnp.float32)
+    y, state = _mlstm_core(params, xin, cfg, B, S, di, state, step=False,
+                           local_gla=local_gla)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"], state
+
+
+def mlstm_step(params, x, cfg: SSMConfig, state):
+    B, _, D = x.shape
+    di = cfg.expand * D
+    proj = x @ params["w_in"]
+    xin, z = jnp.split(proj, 2, axis=-1)
+    y, state = _mlstm_core(params, xin, cfg, B, 1, di, state, step=True)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"], state
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(key, d_model: int, cfg: SSMConfig, dtype):
+    H = cfg.n_heads
+    P = d_model // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        # per-head recurrent weights (H, P, 4P)
+        "r_gates": jax.random.normal(ks[1], (H, P, 4 * P), dtype)
+        * jnp.sqrt(1.0 / P),
+        "w_out": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_forward(params, x, cfg: SSMConfig, state=None,
+                  local_gla: bool = False):
+    """Sequential exponential-gated scalar LSTM with max-stabilizer.
+    x: (B,S,D); state: (c, n, m, h) each (B,H,P)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    if state is None:
+        z = jnp.zeros((B, H, P), jnp.float32)
+        state = (z, z, z - 1e30, z)
+    wx = (x @ params["w_gates"]).astype(jnp.float32)       # (B,S,4D)
+    wx = wx.reshape(B, S, H, 4 * P)
+    if local_gla:
+        # gather the gate pre-activations once, before the time scan, and
+        # pin the recurrent carry batch-local: otherwise GSPMD shards the
+        # (B,H,P) state over 'model' and every one of the S steps incurs
+        # cross-shard collective-permutes (§Perf: 2.36M ops -> O(10))
+        wx = constrain(wx, BATCH, None, "model", None)
+        state = tuple(constrain(s, BATCH, None, None) for s in state)
+    wx = jnp.moveaxis(wx, 1, 0)                            # (S,B,H,4P)
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(st, wxt):
+        c, n, m, h = st
+        rec = jnp.einsum("bhp,hpq->bhq", h, r)             # (B,H,4P)
+        g = wxt + rec
+        zi, ii, ff, oo = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        log_i = jnp.clip(ii, -10.0, 5.0)
+        log_f = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_p = jnp.exp(log_i - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(oo) * c / jnp.maximum(jnp.abs(n), 1.0)
+        if local_gla:
+            c, n, m_new, h = (constrain(t_, BATCH, None, None)
+                              for t_ in (c, n, m_new, h))
+        return (c, n, m_new, h), h
+
+    state, hs = jax.lax.scan(step, state, wx)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    return y @ params["w_out"], state
+
+
+def slstm_step(params, x, cfg: SSMConfig, state):
+    y, state = slstm_forward(params, x, cfg, state)
+    return y, state

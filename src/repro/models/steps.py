@@ -1,0 +1,112 @@
+"""Step functions (train / prefill / decode) + input specs per shape cell.
+
+These are the units the launcher jits with explicit shardings and the
+dry-run lowers/compiles for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..train.optim import adamw_update, clip_by_global_norm
+from .config import ModelConfig
+from .transformer import (IGNORE_ID, init_decode_state, init_params,
+                          lm_loss, model_apply)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell —
+    weak-type-correct, shardable, no device allocation."""
+    S = jax.ShapeDtypeStruct
+    B = global_batch
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    if kind == "decode":
+        if cfg.frontend == "audio_stub":
+            return {"frames": S((B, 1, cfg.d_model), bf16)}
+        return {"tokens": S((B, 1), i32)}
+    # train / prefill
+    batch = {}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = S((B, seq_len, cfg.d_model), bf16)
+        batch["labels"] = S((B, seq_len), i32)
+    elif cfg.frontend == "vision_stub":
+        text_len = seq_len - cfg.n_patches
+        batch["patches"] = S((B, cfg.n_patches, cfg.d_model), bf16)
+        batch["tokens"] = S((B, text_len), i32)
+        batch["labels"] = S((B, text_len), i32)
+    else:
+        batch["tokens"] = S((B, seq_len), i32)
+        batch["labels"] = S((B, seq_len), i32)
+    if kind == "prefill":
+        batch.pop("labels", None)
+    return batch
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def decode_state_structs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, cache_len))
+
+
+# -------------------------------------------------------------- factories
+def make_train_step(cfg: ModelConfig, lr_schedule: Callable | float = 3e-4,
+                    weight_decay: float = 0.01, max_grad_norm: float = 1.0,
+                    grad_transform: Callable | None = None):
+    """train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch, step):
+        (_, (ce, aux)), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(params, cfg, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr = lr_schedule(step) if callable(lr_schedule) else lr_schedule
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr, weight_decay=weight_decay,
+            max_grad_norm=None)
+        metrics = {"loss": ce, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": jnp.asarray(lr, jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    """prefill_step(params, batch, state) -> (last_logits, state)."""
+
+    def prefill_step(params, batch, state):
+        logits, state, _ = model_apply(params, cfg, batch, mode="prefill",
+                                       state=state)
+        return logits[:, -1, :], state
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, batch, state, pos) -> (logits, state).
+    One new token against a cache of length `cache_len` (set by the state
+    pytree) — this is the ``serve_step`` the decode_* cells lower."""
+
+    def decode_step(params, batch, state, pos):
+        logits, state, _ = model_apply(params, cfg, batch, mode="decode",
+                                       state=state, cache_pos=pos)
+        return logits[:, 0, :], state
+
+    return decode_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, (ce, aux) = lm_loss(params, cfg, batch)
+        return {"loss": ce, "aux_loss": aux}
+
+    return eval_step

@@ -1,0 +1,353 @@
+"""Generic decoder-only model covering all 10 assigned architectures.
+
+A model is a `block_pattern` unit tiled over depth.  Supported entries:
+  'attn'         attention + FFN/MoE block, own weights, scanned over reps
+  'attn_shared'  ONE weight set reused at every occurrence (zamba2)
+  'mamba'        Mamba2/SSD block
+  'mlstm'/'slstm' xLSTM blocks
+
+Compile-time structure: parameters for each position of the pattern unit
+are stacked over unit repetitions and the unit is `lax.scan`ned, so the
+traced HLO contains one unit regardless of depth (this is what keeps the
+94-layer qwen3-moe dry-run compile tractable).  A remainder segment (depth
+% unit) is traced explicitly.  `jax.checkpoint` wraps the unit for remat.
+
+Three execution modes: 'train' (full seq, chunked attention), 'prefill'
+(train path + cache write-out), 'decode' (single token, carried
+cache/state).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, decode_attention, gqa_attention
+from .common import (apply_norm, apply_rope, cast_block_params,
+                     cross_entropy_loss, dense_init, dtype_of, embed_init)
+from .config import ModelConfig
+from .mlp import dense_ffn, init_dense_ffn, init_moe_ffn, moe_ffn
+from .ssm import (init_mamba2, init_mlstm, init_slstm, mamba2_forward,
+                  mamba2_step, mlstm_forward, mlstm_step, slstm_forward,
+                  slstm_step)
+from ..parallel.annotate import BATCH, constrain, constrain_batch
+
+IGNORE_ID = -1
+
+
+# ==================================================================== init
+def _init_attn_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.norm == "rms":
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.moe is not None:
+        p["moe"] = init_moe_ffn(ks[4], cfg.d_model, cfg.moe, cfg.act, dtype)
+    elif cfg.d_ff > 0:
+        p["ffn"] = init_dense_ffn(ks[4], cfg.d_model, cfg.d_ff, cfg.act,
+                                  dtype)
+    return p
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    if kind in ("attn", "attn_shared"):
+        return _init_attn_block(key, cfg, dtype)
+    norm = {"ln1": jnp.zeros((cfg.d_model,), dtype)} \
+        if cfg.norm == "rms" else {}
+    if kind == "mamba":
+        return {**norm, "core": init_mamba2(key, cfg.d_model, cfg.ssm, dtype)}
+    if kind == "mlstm":
+        return {**norm, "core": init_mlstm(key, cfg.d_model, cfg.ssm, dtype)}
+    if kind == "slstm":
+        return {**norm, "core": init_slstm(key, cfg.d_model, cfg.ssm, dtype)}
+    raise ValueError(kind)
+
+
+def _unit_and_reps(cfg: ModelConfig):
+    unit = tuple(cfg.block_pattern)
+    reps = cfg.n_layers // len(unit)
+    rem = cfg.pattern_for_depth()[reps * len(unit):]
+    return unit, reps, rem
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = dtype_of(cfg.param_dtype)
+    unit, reps, rem = _unit_and_reps(cfg)
+    ks = jax.random.split(key, 4 + len(unit) + len(rem))
+    params = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.norm == "rms":
+        params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if "attn_shared" in unit or "attn_shared" in rem:
+        params["shared_attn"] = _init_attn_block(ks[2], cfg, dtype)
+
+    def stack_for(kind, key, n):
+        if kind == "attn_shared":
+            return None                              # weights live once
+        inits = [_init_block(jax.random.fold_in(key, r), kind, cfg, dtype)
+                 for r in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
+
+    params["unit"] = [stack_for(kind, ks[3 + i], reps)
+                      for i, kind in enumerate(unit)]
+    params["rem"] = [_init_block(ks[3 + len(unit) + i], kind, cfg, dtype)
+                     if kind != "attn_shared" else None
+                     for i, kind in enumerate(rem)]
+    return params
+
+
+# ================================================================= blocks
+def _attn_block_apply(p, cfg: ModelConfig, x, positions, mode,
+                      cache=None, cache_pos=None):
+    """Returns (x, new_cache, aux_loss)."""
+    B, S, D = x.shape
+    h = apply_norm(cfg.norm, x, p.get("ln1"))
+    q = h @ p["wq"] + (p["bq"].astype(h.dtype) if cfg.qkv_bias else 0.0)
+    k = h @ p["wk"] + (p["bk"].astype(h.dtype) if cfg.qkv_bias else 0.0)
+    v = h @ p["wv"] + (p["bv"].astype(h.dtype) if cfg.qkv_bias else 0.0)
+    q = constrain(q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+                  BATCH, None, "model", None)
+    k = constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  BATCH, None, "model", None)
+    v = constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  BATCH, None, "model", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_pos, 0, 0))
+        attn = decode_attention(q, kc, vc, cache_pos,
+                                mixed=cfg.attn_mixed_precision)
+        new_cache = (kc, vc)
+    elif cfg.attn_impl == "full":
+        attn = gqa_attention(q, k, v, causal=True,
+                             mixed=cfg.attn_mixed_precision)
+    else:
+        attn = chunked_attention(q, k, v, causal=True,
+                                 mixed=cfg.attn_mixed_precision)
+        if mode == "prefill":
+            kc, vc = cache
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (0, 0, 0, 0))
+            new_cache = (kc, vc)
+    out = attn.reshape(B, S, cfg.q_dim) @ p["wo"]
+    x = constrain_batch(x + out)
+
+    h2 = apply_norm(cfg.norm, x, p.get("ln2"))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        ff, aux = moe_ffn(p["moe"], h2, cfg.moe, cfg.act)
+    elif cfg.d_ff > 0:
+        ff = dense_ffn(p["ffn"], h2, cfg.act)
+    else:
+        ff = jnp.zeros_like(x)
+    return constrain_batch(x + ff), new_cache, aux
+
+
+def _ssm_block_apply(kind, p, cfg: ModelConfig, x, mode, state):
+    h = apply_norm(cfg.norm, x, p.get("ln1"))
+    if kind == "mamba":
+        if mode == "decode":
+            ssd, tail = state
+            y, ssd, tail = mamba2_step(p["core"], h, cfg.ssm, ssd, tail)
+            return x + y, (ssd, tail), jnp.zeros((), jnp.float32)
+        y, ssd = mamba2_forward(p["core"], h, cfg.ssm,
+                                state[0] if state is not None else None,
+                                local_gla=cfg.ssm_local_gla)
+        y = constrain_batch(y)
+        tail = state[1] if state is not None else None
+        if mode == "prefill":
+            di = cfg.ssm.expand * cfg.d_model
+            tail = h[:, -(cfg.ssm.conv_width - 1):, :] @ \
+                p["core"]["w_in"][:, di:2 * di]
+        return x + y, (ssd, tail), jnp.zeros((), jnp.float32)
+    if kind == "mlstm":
+        if mode == "decode":
+            y, st = mlstm_step(p["core"], h, cfg.ssm, state)
+        else:
+            y, st = mlstm_forward(p["core"], h, cfg.ssm, state,
+                                  local_gla=cfg.ssm_local_gla)
+        return constrain_batch(x + y), st, jnp.zeros((), jnp.float32)
+    if kind == "slstm":
+        if mode == "decode":
+            y, st = slstm_step(p["core"], h, cfg.ssm, state)
+        else:
+            y, st = slstm_forward(p["core"], h, cfg.ssm, state,
+                                  local_gla=cfg.ssm_local_gla)
+        return constrain_batch(x + y), st, jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+def _block_apply(kind, p, shared_attn, cfg, x, positions, mode, state,
+                 cache_pos):
+    cdt = dtype_of(cfg.compute_dtype)
+    if kind in ("attn", "attn_shared"):
+        weights = shared_attn if kind == "attn_shared" else p
+        return _attn_block_apply(cast_block_params(weights, cdt), cfg, x,
+                                 positions, mode, state, cache_pos)
+    return _ssm_block_apply(kind, cast_block_params(p, cdt), cfg, x, mode,
+                            state)
+
+
+# ================================================================== state
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16):
+    """Per-layer decode state stacked like the params (unit/rem lists)."""
+    unit, reps, rem = _unit_and_reps(cfg)
+
+    def one(kind):
+        if kind in ("attn", "attn_shared"):
+            kc = jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                           dtype)
+            return (kc, kc)
+        di = cfg.ssm.expand * cfg.d_model
+        H, N = cfg.ssm.n_heads, cfg.ssm.state_dim
+        P = di // H
+        if kind == "mamba":
+            return (jnp.zeros((batch, H, P, N), jnp.float32),
+                    jnp.zeros((batch, cfg.ssm.conv_width - 1, di), dtype))
+        if kind == "mlstm":
+            return jnp.zeros((batch, H, P + 1, P), jnp.float32)
+        if kind == "slstm":
+            Hh = cfg.ssm.n_heads
+            Ph = cfg.d_model // Hh
+            z = jnp.zeros((batch, Hh, Ph), jnp.float32)
+            return (z, z, z - 1e30, z)
+
+    def stack(kind, n):
+        leaves = [one(kind) for _ in range(n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *leaves)
+
+    return {"unit": [stack(kind, reps) for kind in unit],
+            "rem": [one(kind) for kind in rem]}
+
+
+# ================================================================ forward
+def _frontend_embed(params, cfg: ModelConfig, batch):
+    """Token / stub-frontend embedding -> (x, positions, label_mask_extra)."""
+    if cfg.frontend == "audio_stub":
+        # precomputed EnCodec frame embeddings (brief: frontend is a stub)
+        x = batch["frames"].astype(dtype_of(cfg.compute_dtype))
+        S = x.shape[1]
+        return x, jnp.arange(S)[None, :]
+    emb = params["embed"]
+    tokens = batch["tokens"]
+    x = emb[tokens].astype(dtype_of(cfg.compute_dtype))
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)     # (B, P, D) SigLIP stub
+        x = jnp.concatenate([patches, x], axis=1)
+    S = x.shape[1]
+    return x, jnp.arange(S)[None, :]
+
+
+def _lm_head(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def model_apply(params, cfg: ModelConfig, batch, mode: str = "train",
+                state=None, cache_pos=None):
+    """Returns (logits, new_state, aux_loss).
+
+    train:   batch has tokens/frames/patches (+labels elsewhere)
+    prefill: same inputs; `state` = init_decode_state, caches filled
+    decode:  single-token batch; `state` carried; cache_pos = position"""
+    unit, reps, rem = _unit_and_reps(cfg)
+    x, positions = _frontend_embed(params, cfg, batch)
+    x = constrain_batch(x)
+    if mode == "decode":
+        positions = jnp.full((x.shape[0], 1), cache_pos)
+    shared = params.get("shared_attn")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state = {"unit": [], "rem": []} if state is not None else None
+
+    def unit_body(x, stacked_p, stacked_st):
+        """One repetition of the pattern unit."""
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_sts = []
+        for i, kind in enumerate(unit):
+            p_i = stacked_p[i]
+            st_i = stacked_st[i] if stacked_st is not None else None
+            x, st_new, aux = _block_apply(kind, p_i, shared, cfg, x,
+                                          positions, mode, st_i, cache_pos)
+            new_sts.append(st_new)
+            aux_sum = aux_sum + aux
+        return x, new_sts, aux_sum
+
+    if reps > 0:
+        if state is None:
+            def scan_step(carry, stacked_p):
+                x, aux_acc = carry
+                x, _, aux = unit_body(x, stacked_p, None)
+                return (x, aux_acc + aux), None
+        else:
+            def scan_step(carry, layer_in):
+                x, aux_acc = carry
+                stacked_p, stacked_st = layer_in
+                x, new_sts, aux = unit_body(x, stacked_p, stacked_st)
+                return (x, aux_acc + aux), new_sts
+        policy = {"full": jax.checkpoint_policies.nothing_saveable,
+                  "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                  "none": None}[cfg.remat_policy]
+        body = jax.checkpoint(scan_step, policy=policy) \
+            if (cfg.remat and cfg.remat_policy != "none") else scan_step
+        if state is None:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["unit"])
+        else:
+            (x, aux_total), new_unit_states = jax.lax.scan(
+                body, (x, aux_total), (params["unit"], state["unit"]))
+            new_state["unit"] = new_unit_states
+
+    for i, kind in enumerate(rem):
+        st_i = state["rem"][i] if state is not None else None
+        x, st_new, aux = _block_apply(kind, params["rem"][i], shared, cfg,
+                                      x, positions, mode, st_i, cache_pos)
+        aux_total = aux_total + aux
+        if state is not None:
+            new_state["rem"].append(st_new)
+
+    x = apply_norm(cfg.norm, x, params.get("final_norm"))
+    logits = constrain(_lm_head(params, cfg, x), BATCH, None, "model")
+    return logits, new_state, aux_total
+
+
+# ================================================================== loss
+def lm_loss(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    logits, _, aux = model_apply(params, cfg, batch, mode="train")
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        # labels cover the text positions; prepend ignore for patches
+        B = labels.shape[0]
+        pad = jnp.full((B, batch["patches"].shape[1]), IGNORE_ID,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = cross_entropy_loss(logits, labels, IGNORE_ID)
+    return loss + aux_weight * aux, (loss, aux)

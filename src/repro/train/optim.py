@@ -1,0 +1,76 @@
+"""Optimizers in pure JAX (no optax in this environment).
+
+AdamW with decoupled weight decay, global-norm clipping, and pluggable LR
+schedules — used both for DOPPLER policy training (lr 1e-4 -> 1e-7 linear,
+per paper §6.1) and for LM training in repro/train/train_loop.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads, state: AdamState, params, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0, max_grad_norm: float | None = 1.0):
+    if max_grad_norm is not None:
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamState(step, mu, nu)
+
+
+def linear_schedule(lr0: float, lr1: float, n_steps: int) -> Callable:
+    def sched(step):
+        frac = jnp.clip(step / max(n_steps, 1), 0.0, 1.0)
+        return lr0 + (lr1 - lr0) * frac
+    return sched
+
+
+def cosine_schedule(lr0: float, lr_min: float, n_steps: int,
+                    warmup: int = 0) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr0 * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(n_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = lr_min + 0.5 * (lr0 - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

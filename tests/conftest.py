@@ -1,0 +1,75 @@
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.devices import uniform_box  # noqa: E402
+from repro.core.graph import DataflowGraph  # noqa: E402
+
+
+def make_diamond(width: int = 8, flops: float = 2e9,
+                 nbytes: float = 4e6) -> DataflowGraph:
+    """2 inputs -> `width` matmuls -> width/2 adds -> 1 reduce."""
+    g = DataflowGraph(f"diamond{width}")
+    i0 = g.add_vertex("input", out_bytes=nbytes)
+    i1 = g.add_vertex("input", out_bytes=nbytes)
+    mms = []
+    for _ in range(width):
+        m = g.add_vertex("matmul", flops=flops, out_bytes=nbytes, meta_op=0)
+        g.add_edge(i0, m)
+        g.add_edge(i1, m)
+        mms.append(m)
+    adds = []
+    for k in range(width // 2):
+        a = g.add_vertex("straight_elemwise", flops=flops * 1e-3,
+                         out_bytes=nbytes, meta_op=0, role="reduce")
+        g.add_edge(mms[2 * k], a)
+        g.add_edge(mms[2 * k + 1], a)
+        adds.append(a)
+    f = g.add_vertex("sum_reduction", flops=flops * 1e-3, out_bytes=nbytes,
+                     meta_op=1)
+    for a in adds:
+        g.add_edge(a, f)
+    return g.freeze()
+
+
+def make_chain(n: int = 10, flops: float = 1e9,
+               nbytes: float = 1e6) -> DataflowGraph:
+    g = DataflowGraph(f"chain{n}")
+    prev = g.add_vertex("input", out_bytes=nbytes)
+    for i in range(n):
+        v = g.add_vertex("matmul", flops=flops, out_bytes=nbytes, meta_op=i)
+        g.add_edge(prev, v)
+        prev = v
+    return g.freeze()
+
+
+def random_dag(rng: np.random.Generator, n: int, p_edge: float = 0.25,
+               n_inputs: int = 2) -> DataflowGraph:
+    g = DataflowGraph("rand")
+    for _ in range(n_inputs):
+        g.add_vertex("input", out_bytes=float(rng.uniform(1e5, 1e6)))
+    for v in range(n_inputs, n):
+        g.add_vertex("matmul", flops=float(rng.uniform(1e8, 2e9)),
+                     out_bytes=float(rng.uniform(1e5, 1e6)),
+                     meta_op=v // 4)
+        preds = [u for u in range(v) if rng.random() < p_edge]
+        if not preds:
+            preds = [int(rng.integers(0, v))]
+        for u in preds[:4]:
+            g.add_edge(u, v)
+    return g.freeze()
+
+
+@pytest.fixture
+def diamond():
+    return make_diamond()
+
+
+@pytest.fixture
+def dev4():
+    return uniform_box(4)

@@ -1,0 +1,129 @@
+"""Architecture-zoo smoke tests: every assigned arch in reduced config runs
+one forward/train step on CPU with finite outputs + correct shapes, and
+prefill->decode matches the full forward (KV-cache correctness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import (ALIASES, ARCH_IDS, SHAPES, all_cells,
+                                    cell_supported, get_config)
+from repro.models.steps import (decode_state_structs, input_specs,
+                                make_decode_step, make_train_step,
+                                param_structs)
+from repro.models.transformer import (init_decode_state, init_params,
+                                      lm_loss, model_apply)
+from repro.train.optim import adamw_init
+
+
+def _batch_for(cfg, key, B=2, S=16):
+    batch = {}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32) * 0.02
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jax.random.normal(key, (B, cfg.n_patches,
+                                                   cfg.d_model)) * 0.02
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch_for(cfg, key)
+    loss, (ce, aux) = jax.jit(lambda p, b: lm_loss(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(ce) > 0
+    # one optimizer step moves the loss
+    step = make_train_step(cfg, lr_schedule=1e-2)
+    opt = adamw_init(params)
+    p2, opt, metrics = jax.jit(step)(params, opt, batch,
+                                     jnp.zeros((), jnp.int32))
+    loss2, _ = jax.jit(lambda p, b: lm_loss(p, cfg, b))(p2, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "gemma_2b", "xlstm_1p3b",
+                                  "zamba2_1p2b", "granite_moe_3b_a800m"])
+def test_prefill_decode_matches_forward(arch):
+    """Greedy logits from prefill+decode must match the full forward —
+    validates KV caches, SSM states, conv tails, and shared-attn caches."""
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              compute_dtype="float32")
+    if cfg.moe is not None:
+        # capacity-based MoE drops tokens as a function of the batch it is
+        # routed with; use a no-drop capacity so prefill+decode is exactly
+        # equivalent to the full forward (dropping semantics are tested by
+        # the arch smoke tests, not here)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 12
+    batch = _batch_for(cfg, key, B=B, S=S)
+    batch.pop("labels")
+    full_logits, _, _ = model_apply(params, cfg, batch, mode="train")
+
+    cache_len = 16
+    state = init_decode_state(cfg, B, cache_len, dtype=jnp.float32)
+    split = S - 3
+    pre_batch = {k: (v[:, :split] if k in ("tokens", "frames") else v)
+                 for k, v in batch.items()}
+    _, state, _ = model_apply(params, cfg, pre_batch, mode="prefill",
+                              state=state)
+    # decode the last 3 positions one at a time
+    offset = cfg.n_patches if cfg.frontend == "vision_stub" else 0
+    for i in range(split, S):
+        tok_batch = {}
+        if cfg.frontend == "audio_stub":
+            tok_batch["frames"] = batch["frames"][:, i:i + 1]
+        else:
+            tok_batch["tokens"] = batch["tokens"][:, i:i + 1]
+        logits, state, _ = model_apply(params, cfg, tok_batch, mode="decode",
+                                       state=state, cache_pos=i + offset)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full_logits[:, i + offset]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_cell_matrix_is_40_with_8_skips():
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if not c[2]]
+    assert len(skips) == 8
+    assert all(s[1] == "long_500k" for s in skips)
+    runnable_long = [c[0] for c in cells if c[1] == "long_500k" and c[2]]
+    assert sorted(runnable_long) == ["xlstm_1p3b", "zamba2_1p2b"]
+
+
+def test_input_specs_cover_all_cells():
+    for arch, shape, ok, _ in all_cells():
+        if not ok:
+            continue
+        cfg = get_config(arch)
+        cell = SHAPES[shape]
+        specs = input_specs(cfg, cell.seq_len, cell.global_batch, cell.kind)
+        for k, s in specs.items():
+            assert s.shape[0] == cell.global_batch, (arch, shape, k)
+
+
+def test_alias_resolution():
+    for alias in ALIASES:
+        assert get_config(alias).name is not None
+
+
+def test_param_count_estimates():
+    cfg = get_config("qwen1p5_110b")
+    n = cfg.n_params()
+    assert 90e9 < n < 130e9, n
+    moe = get_config("qwen3_moe_235b_a22b")
+    assert 180e9 < moe.n_params() < 300e9
+    assert moe.active_params_per_token() < 0.2 * moe.n_params()

@@ -1,0 +1,77 @@
+"""Sharding rules + a small-mesh end-to-end jit (runs on 1 CPU device —
+mesh (1,1); the 256/512-chip meshes are exercised by launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.steps import (input_specs, make_train_step,
+                                param_structs)
+from repro.parallel.annotate import constrain, constrain_batch
+from repro.parallel.sharding import (batch_axes, data_specs, guarded,
+                                     opt_specs, param_specs)
+from repro.train.optim import adamw_init
+
+
+def test_guarded_divisibility():
+    mesh = make_host_mesh(1, 1)
+    # axis size 1 always divides
+    assert guarded(mesh, (40, 16), "model", "data") == P("model", "data")
+
+
+def test_param_specs_structure_matches():
+    cfg = get_config("granite_moe_3b_a800m")
+    structs = param_structs(cfg)
+    mesh = make_host_mesh(1, 1)
+    specs = param_specs(structs, mesh, cfg)
+    s_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    p_leaves = jax.tree_util.tree_leaves(structs)
+    assert len(s_leaves) == len(p_leaves)
+    for spec, leaf in zip(s_leaves, p_leaves):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = constrain_batch(x)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_constrain_drops_nondivisible_axes():
+    mesh = make_host_mesh(1, 1)
+    with jax.set_mesh(mesh):
+        x = jnp.ones((3, 5))
+        y = constrain(x, ("pod", "data"), "model")   # pod doesn't exist
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_end_to_end_sharded_train_step_tiny_mesh():
+    """Full jit train step with in/out shardings on the (1,1) host mesh."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("olmo_1b").reduced(), remat=True)
+    mesh = make_host_mesh(1, 1)
+    from repro.models.transformer import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    pspecs = param_specs(params, mesh, cfg)
+    ospecs = opt_specs(opt, pspecs)
+    B, S = 4, 32
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    bspecs = data_specs(batch, mesh)
+    step = make_train_step(cfg, lr_schedule=1e-3)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs, None),
+                         out_shardings=(pspecs, ospecs, None))
+        p2, o2, metrics = jitted(params, opt, batch,
+                                 jnp.zeros((), jnp.int32))
+    assert jnp.isfinite(metrics["loss"])
+
+
+def test_batch_axes():
+    mesh = make_host_mesh(1, 1)
+    assert batch_axes(mesh) == ("data",)

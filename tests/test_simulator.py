@@ -1,0 +1,134 @@
+"""WC-engine behaviour + hypothesis property tests (paper Alg. 1/2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_chain, make_diamond, random_dag
+from repro.core.devices import uniform_box, p100_box, v100_two_groups, \
+    tpu_v5e_slice
+from repro.core.heuristics import critical_path_assignment, \
+    round_robin_assignment
+from repro.core.simulator import WCSimulator, synchronous_exec_time
+
+
+def test_deterministic_given_seed(diamond, dev4):
+    sim = WCSimulator(diamond, dev4, choose="random", noise_sigma=0.1)
+    a = round_robin_assignment(diamond, 4)
+    t1 = sim.exec_time(a, seed=7)
+    t2 = sim.exec_time(a, seed=7)
+    t3 = sim.exec_time(a, seed=8)
+    assert t1 == t2
+    assert t1 != t3
+
+
+def test_single_device_equals_serial_sum(diamond):
+    dev = uniform_box(1)
+    sim = WCSimulator(diamond, dev)
+    t = sim.exec_time(np.zeros(diamond.n, dtype=int))
+    serial = sum(dev.exec_time(v.flops, 0) for v in diamond.vertices
+                 if v.kind != "input")
+    assert t == pytest.approx(serial, rel=1e-9)
+
+
+def test_balanced_beats_single_device(diamond, dev4):
+    sim = WCSimulator(diamond, dev4)
+    one = sim.exec_time(np.zeros(diamond.n, dtype=int))
+    bal = sim.exec_time(round_robin_assignment(diamond, 4))
+    assert bal < one
+
+
+def test_wc_not_slower_than_synchronous(diamond, dev4):
+    """Work-conserving execution of the same assignment should not lose to
+    the level-wise bulk-synchronous model (Table 1's premise)."""
+    a = round_robin_assignment(diamond, 4)
+    sim = WCSimulator(diamond, dev4)
+    assert sim.exec_time(a) <= synchronous_exec_time(diamond, dev4, a) * 1.01
+
+
+def test_utilization_and_schedule_consistency(diamond, dev4):
+    sim = WCSimulator(diamond, dev4)
+    res = sim.run(round_robin_assignment(diamond, 4), record=True)
+    assert (res.utilization() <= 1.0 + 1e-9).all()
+    execs = [e for e in res.events if e.task[0] == "exec"]
+    n_compute = sum(1 for v in diamond.vertices if v.kind != "input")
+    assert len(execs) == n_compute
+    # per-device compute intervals must not overlap
+    for d in range(dev4.n):
+        iv = sorted((e.beg, e.end) for e in execs if e.task[2] == d)
+        for (b1, e1), (b2, e2) in zip(iv, iv[1:]):
+            assert b2 >= e1 - 1e-12
+
+
+def test_dependencies_respected(diamond, dev4):
+    sim = WCSimulator(diamond, dev4)
+    res = sim.run(round_robin_assignment(diamond, 4), record=True)
+    end = {}
+    for e in res.events:
+        if e.task[0] == "exec":
+            end[e.task[1]] = e.end
+    for e in res.events:
+        if e.task[0] == "exec":
+            v = e.task[1]
+            for p in diamond.preds[v]:
+                if diamond.is_input(p):
+                    continue
+                assert e.beg >= end[p] - 1e-12, (v, p)
+
+
+def test_transfer_classes_v100_groups():
+    g = make_diamond()
+    dev = v100_two_groups()
+    sim = WCSimulator(g, dev, group_of=[0, 0, 0, 0, 1, 1, 1, 1])
+    res = sim.run(np.arange(g.n) % 8)
+    total = sum(res.transfer_class_counts.values())
+    assert total > 0
+
+
+def test_device_presets():
+    for dev in (p100_box(), v100_two_groups(), tpu_v5e_slice(4, 4)):
+        assert dev.n >= 4
+        assert dev.transfer_time(1e6, 0, 1) > 0
+        assert dev.transfer_time(1e6, 0, 0) == 0.0
+    # torus locality: neighbours cheaper than far chips
+    t = tpu_v5e_slice(4, 4)
+    assert t.link_latency[0, 1] < t.link_latency[0, 10]
+
+
+# ----------------------------------------------------------- properties
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(6, 40),
+       nd=st.sampled_from([2, 3, 4, 8]),
+       choose=st.sampled_from(["fifo", "dfs", "random"]))
+def test_property_makespan_bounds(seed, n, nd, choose):
+    """makespan is sandwiched between the critical-path lower bound and
+    the serial sum upper bound, for any assignment and strategy."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = uniform_box(nd)
+    sim = WCSimulator(g, dev, choose=choose)
+    a = rng.integers(0, nd, g.n)
+    res = sim.run(a, seed=seed)
+    lower = g.critical_path_lower_bound(float(dev.flops_per_sec[0]))
+    serial = sum(dev.exec_time(v.flops, 0) for v in g.vertices
+                 if v.kind != "input") \
+        + res.transfer_count * dev.transfer_time(1e6, 0, 1)
+    assert res.makespan >= lower * (1 - 1e-9)
+    assert res.makespan <= serial * (1 + 1e-6) + 1.0
+    assert (res.utilization() <= 1 + 1e-9).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_cp_heuristic_valid(seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, int(rng.integers(8, 30)))
+    dev = uniform_box(4)
+    a, actions = critical_path_assignment(g, dev, seed=seed,
+                                          return_actions=True)
+    assert len(actions) == g.n
+    # action order must be a valid topological order
+    placed = set()
+    for (v, d) in actions:
+        assert all(p in placed for p in g.preds[v])
+        placed.add(int(v))
+    WCSimulator(g, dev).exec_time(a)   # must not deadlock
