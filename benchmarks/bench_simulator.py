@@ -1,0 +1,87 @@
+"""Simulator-engine throughput: serial WCSimulator.run vs the compiled
+batch engine (sim_batch.py), in episodes/sec.
+
+This is the perf trajectory for the Stage-II reward oracle — the paper's
+headline "sampling efficiency" claim rides on per-episode simulator cost,
+so this benchmark is the regression gate for the batched engine.  Rows:
+
+    sim_<n>v_serial,   us_per_episode, eps_per_sec
+    sim_<n>v_batched,  us_per_episode, eps_per_sec + speedup
+    sim_<n>v_batched_noisy, ...             (run_paired, no seed dedup)
+
+Protocol: batch of 32 random assignments per graph size (512 -> 4096
+vertices on the synthetic layered family + the llama_layer paper graph),
+best-of-3 timing, correctness cross-checked against the serial engine on
+every run (the engines are bit-equivalent by contract).
+
+Usage: python -m benchmarks.run sim        (or python benchmarks/bench_simulator.py)
+REPRO_FULL=1 adds the 4096-vertex size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import FULL, emit
+
+from repro.core.devices import p100_box
+from repro.core.simulator import WCSimulator
+from repro.graphs.workloads import llama_layer, synthetic_layered
+
+BATCH = 32
+
+
+def _best_of(fn, n=3):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append(time.perf_counter() - t0)
+    return out, min(ts)
+
+
+def bench_graph(tag: str, graph, dev, *, check_speedup: float | None = None):
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, dev.n, (BATCH, graph.n))
+
+    sim = WCSimulator(graph, dev)
+    ref, t_serial = _best_of(
+        lambda: np.array([sim.run(A[k]).makespan for k in range(BATCH)]))
+    emit(f"sim_{tag}_serial", t_serial / BATCH * 1e6,
+         f"eps_per_sec={BATCH / t_serial:.1f} n={graph.n}")
+
+    out, t_batch = _best_of(lambda: sim.run_batch(A)[:, 0])
+    speedup = t_serial / t_batch
+    assert np.array_equal(ref, out), "batched engine diverged from serial"
+    emit(f"sim_{tag}_batched", t_batch / BATCH * 1e6,
+         f"eps_per_sec={BATCH / t_batch:.1f} speedup={speedup:.1f}x")
+
+    noisy = WCSimulator(graph, dev, noise_sigma=0.05)
+    seeds = list(range(BATCH))
+    ref_n, t_sn = _best_of(
+        lambda: np.array([noisy.run(A[k], seed=seeds[k]).makespan
+                          for k in range(BATCH)]))
+    out_n, t_bn = _best_of(lambda: noisy.run_paired(A, seeds))
+    assert np.array_equal(ref_n, out_n), "noisy batched diverged from serial"
+    emit(f"sim_{tag}_batched_noisy", t_bn / BATCH * 1e6,
+         f"eps_per_sec={BATCH / t_bn:.1f} speedup={t_sn / t_bn:.1f}x")
+
+    if check_speedup is not None and speedup < check_speedup:
+        print(f"# WARNING: sim_{tag} speedup {speedup:.1f}x below the "
+              f"{check_speedup:.0f}x acceptance bar")
+    return speedup
+
+
+def main() -> None:
+    dev = p100_box()
+    # 512-vertex workload graph: the acceptance-bar case (>= 5x @ batch=32)
+    bench_graph("512v", synthetic_layered(32, 16), dev, check_speedup=5.0)
+    bench_graph("1024v", synthetic_layered(64, 16), dev)
+    bench_graph("llama_layer", llama_layer(), dev)
+    if FULL:
+        bench_graph("4096v", synthetic_layered(128, 32), dev)
+
+
+if __name__ == "__main__":
+    main()

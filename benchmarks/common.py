@@ -64,5 +64,7 @@ def timed(fn, *args, n: int = 3, warmup: int = 1):
 
 
 def eval_mean_std(sim, assignment, n_runs: int = 10, seed0: int = 1000):
-    ts = [sim.exec_time(assignment, seed=seed0 + i) for i in range(n_runs)]
+    """Paper protocol: mean/std over n_runs seeds — one batched sweep."""
+    ts = sim.run_batch(assignment,
+                       seeds=[seed0 + i for i in range(n_runs)])[0]
     return float(np.mean(ts)), float(np.std(ts))

@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.dirname(__file__))
 
 MODULES = [
+    ("sim", "bench_simulator"),
     ("table1", "table1_wc_vs_sync"),
     ("table2", "table2_methods"),
     ("table3", "table3_ablation"),

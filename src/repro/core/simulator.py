@@ -114,9 +114,12 @@ class WCSimulator:
         ready_exec: list[tuple[float, int]] = []   # (ready_time, v)
         ready_xfer: list[tuple[float, int, int, int]] = []  # (t, v, src, dst)
 
-        consumers_on: dict[int, set[int]] = {}  # vertex -> devices that need it
+        # vertex -> devices that need it, in first-edge order (an ordered
+        # dict, not a set: deterministic tie-breaking that sim_batch.py can
+        # replicate bit-for-bit)
+        consumers_on: dict[int, dict[int, None]] = {}
         for (s, d) in g.edges:
-            consumers_on.setdefault(s, set()).add(A[d])
+            consumers_on.setdefault(s, {})[int(A[d])] = None
 
         def note_materialized(v: int, d: int, t: float):
             """Result of v became resident on device d at time t."""
@@ -250,6 +253,53 @@ class WCSimulator:
                   ) -> float:
         """ExecTime(A) — the paper's reward oracle (negated by the caller)."""
         return self.run(assignment, seed=seed).makespan
+
+    # ------------------------------------------------------- batched path
+    @property
+    def batch_engine(self):
+        """Compiled batch engine (sim_batch.py), built lazily and reused —
+        bit-equivalent to :meth:`run` per the equivalence contract enforced
+        by tests/test_sim_batch.py."""
+        eng = getattr(self, "_batch_engine", None)
+        if eng is not None and (eng.choose != self.choose
+                                or eng.noise_sigma != self.noise_sigma):
+            eng = None                  # settings changed; recompile
+        if eng is None:
+            from .sim_batch import BatchWCEngine
+            eng = self._batch_engine = BatchWCEngine(
+                self.g, self.dev, choose=self.choose,
+                noise_sigma=self.noise_sigma)
+        return eng
+
+    def run_batch(self, assignments, seeds=None, engine: str = "batched"
+                  ) -> np.ndarray:
+        """Makespans for K assignments x S seeds -> (K, S) array.
+
+        Entry (k, s) equals ``self.run(assignments[k], seed=seeds[s])
+        .makespan``; ``engine='serial'`` evaluates exactly that loop (the
+        reference path used by the equivalence tests), ``'batched'``
+        delegates to the compiled engine.
+        """
+        if engine == "batched":
+            return self.batch_engine.run_batch(assignments, seeds)
+        A = np.asarray(assignments)
+        if A.ndim == 1:
+            A = A[None, :]
+        seed_list = [None] if seeds is None else list(seeds)
+        return np.array([[self.run(a, seed=s).makespan for s in seed_list]
+                         for a in A])
+
+    def run_paired(self, assignments, seeds, engine: str = "batched"
+                   ) -> np.ndarray:
+        """Makespans for K (assignment, seed) pairs -> (K,) array — the
+        Stage-II population-sampling pattern."""
+        if engine == "batched":
+            return self.batch_engine.run_paired(assignments, seeds)
+        A = np.asarray(assignments)
+        if A.ndim == 1:
+            A = A[None, :]
+        return np.array([self.run(a, seed=s).makespan
+                         for a, s in zip(A, seeds)])
 
 
 def synchronous_exec_time(graph: DataflowGraph, devices: DeviceModel,

@@ -224,13 +224,18 @@ class DopplerTrainer:
         return times
 
     def stage2_sim_batched(self, n_updates: int, sim: WCSimulator | None = None,
-                           batch_size: int = 8, log_every: int = 0):
+                           batch_size: int = 8, log_every: int = 0,
+                           sim_engine: str = "batched"):
         """Population variant of Stage II: sample `batch_size` episodes in
-        ONE vmapped rollout, evaluate their rewards, and take one
-        batch-averaged REINFORCE step.  Same total-episode budget as
+        ONE vmapped rollout, evaluate their rewards against the compiled
+        batch simulator (sim_batch.py), and take one batch-averaged
+        REINFORCE step.  Same total-episode budget as
         `stage2_sim(n_updates * batch_size)` with ~batch_size x fewer XLA
-        dispatches and a lower-variance gradient (the batch itself acts as
-        a per-update baseline)."""
+        dispatches, a lower-variance gradient (the batch itself acts as a
+        per-update baseline), and the reward oracle off the Python
+        event-loop hot path.  `sim_engine='serial'` keeps the reference
+        per-episode `WCSimulator.run` loop (identical results; used by the
+        integration tests)."""
         sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
                                  noise_sigma=0.05)
         times = []
@@ -242,9 +247,10 @@ class DopplerTrainer:
                                 sel_mode=self.sel_mode,
                                 plc_mode=self.plc_mode)
             assigns = np.asarray(out["assignment"])
-            ts = np.array([sim.exec_time(assigns[k],
-                                         seed=self.episode * batch_size + k)
-                           for k in range(batch_size)])
+            ts = sim.run_paired(
+                assigns,
+                [self.episode * batch_size + k for k in range(batch_size)],
+                engine=sim_engine)
             rs = -ts
             mean, std = self._baseline()
             advs = rs - (mean if self._r_count else rs.mean())
@@ -295,7 +301,8 @@ class DopplerTrainer:
         if a is None:
             a = self.greedy_assignment()
         if isinstance(sim_or_fn, WCSimulator):
-            ts = [sim_or_fn.exec_time(a, seed=1000 + i) for i in range(n_runs)]
+            ts = sim_or_fn.run_batch(a, seeds=[1000 + i
+                                               for i in range(n_runs)])[0]
         else:
             ts = [sim_or_fn(a) for i in range(n_runs)]
         return float(np.mean(ts)), float(np.std(ts)), a
@@ -332,11 +339,13 @@ class FleetTrainer:
                                        noise_sigma=noise_sigma)
                      for name, g in block_graphs.items()}
 
-    def fleet_exec_time(self, name: str, assignment, episode: int) -> float:
-        """Mean exec time of the replicated assignment across the fleet."""
+    def fleet_exec_time(self, name: str, assignment, episode: int,
+                        sim_engine: str = "batched") -> float:
+        """Mean exec time of the replicated assignment across the fleet —
+        one batched K=1 x S=n_replicas sweep instead of a Python loop."""
         sim = self.sims[name]
-        ts = [sim.exec_time(assignment, seed=episode * self.n_replicas + r)
-              for r in range(self.n_replicas)]
+        seeds = [episode * self.n_replicas + r for r in range(self.n_replicas)]
+        ts = sim.run_batch(assignment, seeds=seeds, engine=sim_engine)[0]
         return float(np.mean(ts))
 
     def train(self, n_episodes: int, log_every: int = 0):

@@ -108,6 +108,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def analyse(cfg, cell, lowered, compiled, meta) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     n_chips = meta["n_chips"]

@@ -9,24 +9,26 @@ from __future__ import annotations
 
 import jax
 
+from ..parallel.compat import auto_axis_types, make_mesh
+
 
 def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+    return auto_axis_types(n)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=_auto(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[: data * model],
-                         axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[: data * model],
+                     axis_types=_auto(2))
 
 
 HW_V5E = {

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..parallel.annotate import constrain, constrain_first
+from ..parallel.compat import get_abstract_mesh
 from .common import dense_init, gated_act
 from .config import MoEConfig
 
@@ -53,7 +54,7 @@ def init_moe_ffn(key, d_model: int, cfg: MoEConfig, act: str, dtype):
 def moe_ffn(params, x, cfg: MoEConfig, act: str):
     """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss."""
     if cfg.dispatch == "shard_map":
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         if (mesh is not None and "model" in mesh.axis_names
                 and cfg.n_experts % dict(mesh.shape)["model"] == 0):
             return _moe_ffn_shard_map(params, x, cfg, act, mesh)

@@ -15,6 +15,8 @@ import numpy as np
 import jax
 from jax.sharding import PartitionSpec as P
 
+from .compat import get_abstract_mesh
+
 BATCH = ("pod", "data")          # filtered against the ambient mesh
 MODEL = "model"
 
@@ -26,7 +28,7 @@ def _axes_tuple(entry):
 
 
 def constrain(x, *spec):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(mesh.shape)
@@ -61,7 +63,7 @@ def constrain_first(x, axis, dims):
     None.  Used by the MoE dispatch: experts over 'model' when the expert
     count divides (EP), else capacity over 'model' (token-parallel — the
     granite-40-experts fallback)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(mesh.shape)

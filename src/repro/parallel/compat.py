@@ -1,0 +1,148 @@
+"""jax version-compat layer for the sharding surface this repo relies on.
+
+The production code targets the modern mesh API (``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``, ``jax.set_mesh``, ``jax.make_mesh`` with
+``axis_types=``) while the pinned container runs jax 0.4.37, which predates
+all four.  This module provides guarded fallbacks:
+
+* ``AxisType``      — re-export, or a stand-in enum with Auto/Explicit/Manual.
+* ``get_abstract_mesh`` — re-export, or a reader of the legacy thread-local
+  mesh context (``with mesh:``).  Outside any context it returns the empty
+  mesh whose ``axis_names`` is ``()``, which every call site already treats
+  as "no ambient mesh".
+* ``set_mesh``      — re-export, or a context manager delegating to the
+  legacy ``Mesh.__enter__`` context (under which
+  ``with_sharding_constraint`` accepts bare ``PartitionSpec``\\s, matching
+  the modern behaviour our code needs).
+* ``make_mesh``     — forwards ``axis_types`` when the installed jax accepts
+  it and silently drops it otherwise (0.4.x meshes have no axis types; every
+  axis behaves as Auto, which is what the callers request anyway).
+
+``install()`` additionally publishes the fallbacks onto the ``jax`` /
+``jax.sharding`` namespaces **only where the attribute is missing**, so
+call sites written against the modern API (including the test-suite's
+``jax.set_mesh(...)`` blocks) run unchanged on 0.4.37 and are untouched on
+newer jax.  It runs once at import; importing this module anywhere in
+``repro.parallel`` / ``repro.launch`` / ``repro.models`` is sufficient.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as _jsharding
+
+__all__ = ["AxisType", "get_abstract_mesh", "set_mesh", "make_mesh",
+           "auto_axis_types", "install"]
+
+
+# ----------------------------------------------------------------- AxisType
+if hasattr(_jsharding, "AxisType"):
+    AxisType = _jsharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType (jax >= 0.5)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def auto_axis_types(n: int) -> tuple:
+    return (AxisType.Auto,) * n
+
+
+# -------------------------------------------------------- get_abstract_mesh
+if hasattr(_jsharding, "get_abstract_mesh"):
+    get_abstract_mesh = _jsharding.get_abstract_mesh
+else:
+    def get_abstract_mesh():
+        """Ambient mesh from the legacy ``with mesh:`` thread-local.
+
+        Returns the empty Mesh (``axis_names == ()``) outside any context,
+        mirroring how the modern API returns an empty AbstractMesh.
+        """
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.thread_resources.env.physical_mesh
+
+
+# ----------------------------------------------------------------- set_mesh
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """Fallback for ``jax.set_mesh``: the legacy Mesh context manager.
+
+        Inside it, ``with_sharding_constraint`` resolves bare
+        ``PartitionSpec``s against ``mesh`` and ``get_abstract_mesh``
+        (above) observes it — the two behaviours the code base needs.
+        """
+        with mesh:
+            yield mesh
+
+
+# ---------------------------------------------------------------- make_mesh
+_real_make_mesh = jax.make_mesh
+_accepts_axis_types = "axis_types" in inspect.signature(_real_make_mesh).parameters
+
+
+@functools.wraps(_real_make_mesh)
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    if _accepts_axis_types:
+        return _real_make_mesh(axis_shapes, axis_names, devices=devices,
+                               axis_types=axis_types)
+    return _real_make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+# ------------------------------------------------------- jit spec shardings
+# Modern jax resolves bare PartitionSpecs in jit's in_/out_shardings against
+# the ambient mesh; 0.4.x rejects them.  This wrapper performs the same
+# resolution when a legacy ``with mesh:`` / set_mesh-fallback context is
+# active, and passes everything else through untouched.
+_real_jit = jax.jit
+_needs_jit_shim = not hasattr(jax, "set_mesh")
+
+
+def _resolve_spec_shardings(tree):
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = get_abstract_mesh()
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return tree
+
+    def conv(leaf):
+        return NamedSharding(mesh, leaf) if isinstance(leaf, PartitionSpec) \
+            else leaf
+
+    return jax.tree_util.tree_map(
+        conv, tree, is_leaf=lambda x: x is None or isinstance(x, PartitionSpec))
+
+
+@functools.wraps(_real_jit)
+def jit(fun=None, **kwargs):
+    for k in ("in_shardings", "out_shardings"):
+        if k in kwargs:
+            kwargs[k] = _resolve_spec_shardings(kwargs[k])
+    if fun is None:
+        return functools.partial(jit, **kwargs)
+    return _real_jit(fun, **kwargs)
+
+
+# ------------------------------------------------------------------ install
+def install() -> None:
+    """Publish the fallbacks onto jax's namespaces where absent (idempotent)."""
+    if not hasattr(_jsharding, "AxisType"):
+        _jsharding.AxisType = AxisType
+    if not hasattr(_jsharding, "get_abstract_mesh"):
+        _jsharding.get_abstract_mesh = get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not _accepts_axis_types:
+        jax.make_mesh = make_mesh
+    if _needs_jit_shim and jax.jit is _real_jit:
+        jax.jit = jit
+
+
+install()

@@ -8,7 +8,11 @@ import pathlib
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container has no hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from conftest import make_diamond, random_dag
 from repro.core.devices import uniform_box

@@ -1,7 +1,11 @@
 """WC-engine behaviour + hypothesis property tests (paper Alg. 1/2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container has no hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from conftest import make_chain, make_diamond, random_dag
 from repro.core.devices import uniform_box, p100_box, v100_two_groups, \

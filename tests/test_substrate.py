@@ -175,6 +175,13 @@ def test_jaxpr_import_costs():
 
 
 # ------------------------------------------------------------ hlo static
+def _xla_costs(comp):
+    """compiled.cost_analysis() returns a dict on jax >= 0.5 and a
+    one-element list of dicts on 0.4.x."""
+    c = comp.cost_analysis()
+    return c[0] if isinstance(c, (list, tuple)) else c
+
+
 def test_hlo_analyzer_matches_cost_analysis_scanfree():
     def g(a, b):
         return jnp.tanh(a @ b) @ b
@@ -183,7 +190,7 @@ def test_hlo_analyzer_matches_cost_analysis_scanfree():
                             jax.ShapeDtypeStruct((128, 128), jnp.float32)
                             ).compile()
     ours = analyze_hlo(comp.as_text())
-    xla = comp.cost_analysis()
+    xla = _xla_costs(comp)
     assert ours["flops"] == pytest.approx(xla["flops"], rel=0.05)
     assert ours["mem_bytes"] == pytest.approx(xla["bytes accessed"],
                                               rel=0.25)
@@ -202,7 +209,7 @@ def test_hlo_analyzer_scales_scan_bodies():
     expected = 16 * 2 * 64 ** 3
     assert ours["flops"] >= expected
     assert ours["flops"] < expected * 1.3
-    assert comp.cost_analysis()["flops"] < expected / 4  # XLA undercounts
+    assert _xla_costs(comp)["flops"] < expected / 4  # XLA undercounts
 
 
 # ------------------------------------------------------------ compression
