@@ -27,6 +27,7 @@ MODULES = [
     ("table9", "table9_hardware"),
     ("g1", "g1_sim_fidelity"),
     ("roofline", "roofline"),
+    ("zoo", "zoo_sweep"),
 ]
 
 

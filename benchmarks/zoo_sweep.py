@@ -1,0 +1,103 @@
+"""Scenario-zoo sweep (tag `zoo`): every registry model x heterogeneous
+fleet.
+
+For each imported real-model layer graph (graphs/model_zoo.py) on each
+heterogeneous device fleet (mixed-generation GPUs, a 2-pod v5e slice with
+asymmetric DCN, a straggler box) this trains SEL/PLC with the standard
+protocol — Stage-I imitation of the CRITICAL-PATH teacher, then Stage-II
+REINFORCE against the compiled WC engine — and reports the best-found
+makespan against the CP and random baselines.
+
+Protocol note: the reported DOPPLER number is the best-found protocol's —
+it covers the Stage-I teacher trials, which reuse the CP baseline's exact
+seeds, so doppler <= cp holds by construction.  The regression-sensitive
+numbers are `policy_us` (best assignment Stage II itself sampled) and the
+policy-beats-random guard asserted at the end.  Reduced budgets rotate
+each model through one fleet (REPRO_FULL=1 sweeps all fleets with
+paper-scale budgets).
+
+CSV columns: zoo_<model>_<fleet>, doppler_us, derived metrics.
+"""
+from __future__ import annotations
+
+from common import FULL, budget, emit, trainer_kwargs
+
+from repro.configs.registry import ARCH_IDS
+from repro.core.devices import HETERO_FLEETS, get_device_model
+from repro.core.heuristics import (best_critical_path, random_assignment)
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import get_workload
+
+
+def sweep_one(arch: str, fleet: str, *, seq: int, unit_blocks,
+              n_teacher: int, n_updates: int, batch_size: int) -> dict:
+    g = get_workload(f"model:{arch}", seq=seq, unit_blocks=unit_blocks)
+    dev = get_device_model(fleet)
+    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+
+    cp_a, cp_t = best_critical_path(g, dev, sim.exec_time,
+                                    n_trials=n_teacher, seed=0)
+    rand_t = min(sim.exec_time(random_assignment(g, dev.n, seed=s))
+                 for s in range(5))
+    lb = g.critical_path_lower_bound(dev.flops_per_sec)
+
+    tr = DopplerTrainer(g, dev, seed=0,
+                        total_episodes=n_teacher + n_updates * batch_size,
+                        **trainer_kwargs())
+    tr.stage1_imitation(n_teacher, seed=0)
+    tr.stage2_sim_batched(n_updates, sim, batch_size=batch_size)
+    # policy_t: best assignment the policy itself sampled (Stage II).
+    # The reported DOPPLER result follows the best-found protocol, which
+    # additionally covers the Stage-I teacher's trials — the CP baseline
+    # reuses those exact seeds, so the protocol best is min(policy, cp)
+    # by construction; policy_t is the regression-sensitive number.
+    policy_t = float(tr.best_time)
+    best_a = tr.best_assignment if policy_t <= cp_t else cp_a
+    dt = float(sim.exec_time(best_a))
+
+    mem = "-"
+    if dev.mem_bytes is not None:
+        mem = str(bool(dev.memory_ok(g.bytes_per_device(best_a, dev.n))))
+    return {"n": g.n, "cp": cp_t, "rand": rand_t, "doppler": dt,
+            "policy": policy_t, "lb": lb, "mem_ok": mem,
+            "win": dt <= cp_t, "policy_win": policy_t <= cp_t,
+            "policy_sane": policy_t <= rand_t}
+
+
+def main() -> None:
+    seq = budget(128, 256)
+    n_teacher = budget(8, 50)
+    n_updates = budget(4, 100)
+    batch_size = 8
+    unit_blocks = None if FULL else 4       # cap xlstm/zamba2 unit length
+    wins = policy_wins = sane = total = 0
+    for i, arch in enumerate(ARCH_IDS):
+        fleets = HETERO_FLEETS if FULL \
+            else (HETERO_FLEETS[i % len(HETERO_FLEETS)],)
+        for fleet in fleets:
+            r = sweep_one(arch, fleet, seq=seq, unit_blocks=unit_blocks,
+                          n_teacher=n_teacher, n_updates=n_updates,
+                          batch_size=batch_size)
+            total += 1
+            wins += bool(r["win"])
+            policy_wins += bool(r["policy_win"])
+            sane += bool(r["policy_sane"])
+            emit(f"zoo_{arch}_{fleet}", r["doppler"] * 1e6,
+                 f"n={r['n']};cp_us={r['cp']*1e6:.1f};"
+                 f"policy_us={r['policy']*1e6:.1f};"
+                 f"rand_us={r['rand']*1e6:.1f};lb_us={r['lb']*1e6:.1f};"
+                 f"mem_ok={r['mem_ok']};win={r['win']}")
+    emit("zoo_summary", 0.0,
+         f"doppler<=cp on {wins}/{total} cells (protocol best); "
+         f"policy alone <=cp on {policy_wins}/{total}, "
+         f"<=random on {sane}/{total}")
+    # regression guard: a policy that learned nothing samples ~random
+    # assignments; it must beat the random baseline everywhere even at
+    # reduced budgets (the protocol-best column can't catch this)
+    assert sane == total, \
+        f"stage-II policy beat random on only {sane}/{total} cells"
+
+
+if __name__ == "__main__":
+    main()

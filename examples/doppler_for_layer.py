@@ -1,82 +1,84 @@
 """DOPPLER x model-zoo integration (DESIGN.md §3, paper Appendix I):
 
-1. take one transformer layer from the assigned-architecture zoo,
-2. import its jaxpr as a DataflowGraph (repro.graphs.jaxpr_import),
-3. DOPPLER-assign it to a TPU v5e 2x2 slice (device model preset),
+1. pick any registry architecture (--model) — its layer (one block-pattern
+   repetition) is traced to a jaxpr and imported as a DataflowGraph
+   (repro.graphs.model_zoo),
+2. pick any device fleet (--fleet), homogeneous or heterogeneous
+   (mixed-generation GPUs, 2-pod slices, stragglers — see
+   repro.core.devices.PRESETS),
+3. DOPPLER-assign the layer: Stage-I imitation of CRITICAL PATH, Stage-II
+   REINFORCE against the compiled WC engine,
 4. replicate the per-block assignment across the repeated layers /
    data-parallel replicas and report fleet-level utilization.
 
-Run:  PYTHONPATH=src python examples/doppler_for_layer.py
+Run:  PYTHONPATH=src python examples/doppler_for_layer.py \
+          --model gemma_2b --fleet mixed_gen4
 """
-import dataclasses
+import argparse
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.core.devices import tpu_v5e_slice
+from repro.configs.registry import ARCH_IDS
+from repro.core.devices import PRESETS, get_device_model
 from repro.core.heuristics import best_critical_path
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer, FleetTrainer
-from repro.graphs.jaxpr_import import jaxpr_to_graph
-from repro.models.transformer import _attn_block_apply, _init_attn_block
-from repro.models.common import dtype_of
+from repro.graphs.workloads import get_workload
+
+
+def parse_args():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--model", default="phi4_mini_3p8b", choices=ARCH_IDS,
+                   help="registry architecture whose layer to assign")
+    p.add_argument("--fleet", default="tpu_v5e_2x2", choices=sorted(PRESETS),
+                   help="device-model preset (heterogeneous fleets included)")
+    p.add_argument("--seq", type=int, default=128,
+                   help="sequence length of the traced layer")
+    p.add_argument("--unit-blocks", type=int, default=4,
+                   help="cap on pattern-unit blocks traced (0 = full unit)")
+    p.add_argument("--stage1", type=int, default=20,
+                   help="Stage-I imitation episodes")
+    p.add_argument("--updates", type=int, default=24,
+                   help="Stage-II batched updates (x8 episodes each)")
+    return p.parse_args()
 
 
 def main():
-    # a mid-size slice of the phi4 family block, traced to a jaxpr
-    cfg = dataclasses.replace(get_config("phi4_mini_3p8b").reduced(),
-                              d_model=512, n_heads=8, n_kv_heads=4,
-                              head_dim=64, d_ff=1024,
-                              compute_dtype="float32")
-    params = _init_attn_block(jax.random.PRNGKey(0), cfg,
-                              dtype_of(cfg.param_dtype))
-    S = jax.ShapeDtypeStruct
+    args = parse_args()
+    g = get_workload(f"model:{args.model}", seq=args.seq,
+                     unit_blocks=args.unit_blocks or None)
+    dev = get_device_model(args.fleet)
+    print(f"imported layer graph: {g} on {dev.name} "
+          f"(heterogeneous={dev.heterogeneous})")
 
-    def layer(x, wq, wk, wv, wo, wg, wu, wd):
-        p = dict(params, wq=wq, wk=wk, wv=wv, wo=wo,
-                 ffn={"w_gate": wg, "w_up": wu, "w_down": wd})
-        y, _, _ = _attn_block_apply(p, cfg, x, jnp.arange(x.shape[1])[None],
-                                    "train")
-        return y
-
-    x = S((1, 256, cfg.d_model), jnp.float32)
-    w = params
-    args = [x, S(w["wq"].shape, jnp.float32), S(w["wk"].shape, jnp.float32),
-            S(w["wv"].shape, jnp.float32), S(w["wo"].shape, jnp.float32),
-            S(w["ffn"]["w_gate"].shape, jnp.float32),
-            S(w["ffn"]["w_up"].shape, jnp.float32),
-            S(w["ffn"]["w_down"].shape, jnp.float32)]
-    g = jaxpr_to_graph(layer, *args, name="phi4_block", cheap_flops=1e5)
-    print(f"imported block graph: {g}")
-
-    dev = tpu_v5e_slice(2, 2)
     sim = WCSimulator(g, dev, noise_sigma=0.03)
     cp_a, cp_t = best_critical_path(g, dev,
                                     lambda a: sim.exec_time(a, seed=0),
                                     n_trials=20)
-    print(f"CRITICAL PATH on v5e 2x2: {cp_t*1e6:.0f} us")
+    print(f"CRITICAL PATH on {dev.name}: {cp_t*1e6:.0f} us")
 
-    tr = DopplerTrainer(g, dev, seed=0, total_episodes=400,
-                    lr0=3e-3, lr1=1e-5)   # budget-scaled lr
-    tr.stage1_imitation(60)
-    tr.stage2_sim(340, sim)
+    total = args.stage1 + args.updates * 8
+    tr = DopplerTrainer(g, dev, seed=0, total_episodes=total,
+                        lr0=3e-3, lr1=1e-5)   # budget-scaled lr
+    tr.stage1_imitation(args.stage1)
+    tr.stage2_sim_batched(args.updates, sim, batch_size=8)
     mean, std, a = tr.evaluate(sim)
-    print(f"DOPPLER on v5e 2x2:      {mean*1e6:.0f} +- {std*1e6:.0f} us "
+    print(f"DOPPLER on {dev.name}:      {mean*1e6:.0f} +- {std*1e6:.0f} us "
           f"({100*(1-mean/cp_t):.1f}% vs CP)")
+    if dev.mem_bytes is not None:
+        print(f"memory fits: {dev.memory_ok(g.bytes_per_device(a, dev.n))}")
 
     # Appendix-I scale-out: same block graph trained with fleet-aggregated
     # rewards (replicated assignment across DP replicas)
-    fleet = FleetTrainer({"phi4_block": g}, dev, n_replicas=4, seed=1,
-                         total_episodes=200, lr0=3e-3, lr1=1e-5)
-    fleet.train(180)
-    fa = fleet.assignments()["phi4_block"]
-    res = sim.run(fa)
+    fleet = FleetTrainer({args.model: g}, dev, n_replicas=4, seed=1,
+                         total_episodes=120, lr0=3e-3, lr1=1e-5)
+    fleet.train(100)
+    fa = fleet.assignments()[args.model]
+    res = sim.run(fa if fa is not None else a)
     print(f"fleet-trained assignment: {res.makespan*1e6:.0f} us, "
           f"utilization {res.utilization().round(2)}")
 

@@ -4,6 +4,13 @@ The paper's engine ran on P100/V100 NVLink boxes; per DESIGN.md §3 the
 device model is parameterized so the same DOPPLER machinery targets TPU
 pods: a TPU v5e preset models ICI neighbor links on a 2D torus with
 hop-count latency (the TPU-idiomatic equivalent of NVLink P2P).
+
+Heterogeneous fleets: every per-device quantity (compute rate, kernel
+launch overhead, memory capacity) may vary per device, and the link
+matrices may be asymmetric (bw[i, j] != bw[j, i] — e.g. an oversubscribed
+DCN return path between pods).  Both WC engines (the serial reference
+loop and the compiled batch engine) read costs through the same
+expressions, so non-uniform fleets stay bit-identical across engines.
 """
 from __future__ import annotations
 
@@ -18,23 +25,59 @@ class DeviceModel:
 
     Attributes:
       flops_per_sec: (n,) effective FLOP/s per device.
-      link_bw: (n, n) bytes/sec for a direct transfer d1->d2 (0 diag).
+      link_bw: (n, n) bytes/sec for a direct transfer d1->d2 (0 diag);
+        may be asymmetric.
       link_latency: (n, n) seconds of fixed setup per transfer.
-      exec_overhead: per-kernel launch overhead (seconds).
+      exec_overhead: per-kernel launch overhead (seconds) — a scalar, or
+        an (n,) array for fleets with per-device launch costs.
+      mem_bytes: optional (n,) per-device memory capacity; None = ignore
+        memory (the homogeneous-preset default).
       name: preset name.
     """
     flops_per_sec: np.ndarray
     link_bw: np.ndarray
     link_latency: np.ndarray
-    exec_overhead: float = 5e-6
+    exec_overhead: float | np.ndarray = 5e-6
     name: str = "custom"
+    mem_bytes: np.ndarray | None = None
+
+    def __post_init__(self):
+        self.flops_per_sec = np.asarray(self.flops_per_sec, dtype=np.float64)
+        self.link_bw = np.asarray(self.link_bw, dtype=np.float64)
+        self.link_latency = np.asarray(self.link_latency, dtype=np.float64)
+        if np.ndim(self.exec_overhead):
+            self.exec_overhead = np.asarray(self.exec_overhead,
+                                            dtype=np.float64)
+        else:
+            self.exec_overhead = float(self.exec_overhead)
+        if self.mem_bytes is not None:
+            self.mem_bytes = np.asarray(self.mem_bytes, dtype=np.float64)
 
     @property
     def n(self) -> int:
         return len(self.flops_per_sec)
 
+    @property
+    def exec_overhead_vec(self) -> np.ndarray:
+        """(n,) launch overhead — scalar overheads broadcast."""
+        if np.ndim(self.exec_overhead):
+            return self.exec_overhead
+        return np.full(self.n, self.exec_overhead)
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when any per-device rate/overhead differs or any link pair
+        is asymmetric."""
+        return bool(
+            np.ptp(self.flops_per_sec) > 0
+            or np.ptp(self.exec_overhead_vec) > 0
+            or not np.array_equal(self.link_bw, self.link_bw.T)
+            or not np.array_equal(self.link_latency, self.link_latency.T))
+
     def exec_time(self, flops: float, device: int) -> float:
-        return self.exec_overhead + flops / self.flops_per_sec[device]
+        ov = (self.exec_overhead[device] if np.ndim(self.exec_overhead)
+              else self.exec_overhead)
+        return ov + flops / self.flops_per_sec[device]
 
     def transfer_time(self, nbytes: float, src: int, dst: int) -> float:
         if src == dst:
@@ -47,6 +90,13 @@ class DeviceModel:
             t = self.link_latency + nbytes / self.link_bw
         np.fill_diagonal(t, 0.0)
         return t
+
+    def memory_ok(self, bytes_per_device: np.ndarray) -> bool:
+        """Does a per-device residency profile fit?  Always True when the
+        fleet has no modeled capacity."""
+        if self.mem_bytes is None:
+            return True
+        return bool((np.asarray(bytes_per_device) <= self.mem_bytes).all())
 
 
 def p100_box(n: int = 4) -> DeviceModel:
@@ -112,13 +162,116 @@ def uniform_box(n: int, flops: float = 1e12, bw: float = 50e9,
     return DeviceModel(f, b, l, name=f"uniform{n}")
 
 
+# ------------------------------------------------------ heterogeneous fleets
+def scale_fleet(base: DeviceModel, speed=None, mem=None,
+                name: str | None = None) -> DeviceModel:
+    """Per-device speed/memory multipliers applied to an existing fleet.
+
+    speed: scalar or (n,) multipliers on flops_per_sec.
+    mem:   scalar or (n,) multipliers on mem_bytes (requires the base to
+           model memory, or pass absolute bytes via `DeviceModel` directly).
+    """
+    flops = base.flops_per_sec * (np.ones(base.n) if speed is None
+                                  else np.asarray(speed, dtype=np.float64))
+    mem_bytes = base.mem_bytes
+    if mem is not None:
+        if mem_bytes is None:
+            raise ValueError(f"{base.name}: no mem_bytes to scale")
+        mem_bytes = mem_bytes * np.asarray(mem, dtype=np.float64)
+    elif mem_bytes is not None:
+        mem_bytes = mem_bytes.copy()
+    overhead = (base.exec_overhead.copy()
+                if isinstance(base.exec_overhead, np.ndarray)
+                else base.exec_overhead)
+    return DeviceModel(flops, base.link_bw.copy(), base.link_latency.copy(),
+                       exec_overhead=overhead,
+                       mem_bytes=mem_bytes,
+                       name=name or f"{base.name}_scaled")
+
+
+def mixed_generation_box(n_fast: int = 2, n_slow: int = 2) -> DeviceModel:
+    """Mixed-generation GPU box: `n_fast` V100-class (14 TF, 32 GB,
+    NVLink'd together at ~100 GB/s) + `n_slow` P100-class (4.7 TF, 16 GB,
+    NVLink'd at ~40 GB/s).  Cross-generation transfers go over PCIe and
+    are asymmetric: 12 GB/s fast->slow vs 10 GB/s slow->fast (the older
+    cards' read path is slower)."""
+    n = n_fast + n_slow
+    fast = np.arange(n) < n_fast
+    flops = np.where(fast, 14e12, 4.7e12)
+    mem = np.where(fast, 32e9, 16e9)
+    bw = np.empty((n, n))
+    lat = np.empty((n, n))
+    for i in range(n):
+        for j in range(n):
+            if fast[i] and fast[j]:
+                bw[i, j], lat[i, j] = 100e9, 8e-6
+            elif not fast[i] and not fast[j]:
+                bw[i, j], lat[i, j] = 40e9, 10e-6
+            elif fast[i]:                       # fast -> slow
+                bw[i, j], lat[i, j] = 12e9, 15e-6
+            else:                               # slow -> fast
+                bw[i, j], lat[i, j] = 10e9, 15e-6
+    np.fill_diagonal(bw, np.inf)
+    np.fill_diagonal(lat, 0.0)
+    overhead = np.where(fast, 4e-6, 6e-6)       # older launch path is slower
+    return DeviceModel(flops, bw, lat, exec_overhead=overhead,
+                       mem_bytes=mem, name=f"mixed_v100x{n_fast}_p100x{n_slow}")
+
+
+def two_pod_fleet(rows: int = 2, cols: int = 2,
+                  dcn_bw_out: float = 6.25e9, dcn_bw_back: float = 5.0e9,
+                  dcn_latency: float = 25e-6) -> DeviceModel:
+    """Two TPU v5e pods (each a rows x cols torus) joined by DCN.
+
+    Intra-pod links are the ICI model of :func:`tpu_v5e_slice`; inter-pod
+    transfers cross the data-center network, with an asymmetric return
+    path (`dcn_bw_back` < `dcn_bw_out`, modeling an oversubscribed
+    pod-1 -> pod-0 direction)."""
+    pod = tpu_v5e_slice(rows, cols)
+    k = pod.n
+    n = 2 * k
+    flops = np.concatenate([pod.flops_per_sec, pod.flops_per_sec])
+    bw = np.empty((n, n))
+    lat = np.empty((n, n))
+    bw[:k, :k] = bw[k:, k:] = pod.link_bw
+    lat[:k, :k] = lat[k:, k:] = pod.link_latency
+    bw[:k, k:] = dcn_bw_out
+    bw[k:, :k] = dcn_bw_back
+    lat[:k, k:] = lat[k:, :k] = dcn_latency
+    np.fill_diagonal(bw, np.inf)
+    np.fill_diagonal(lat, 0.0)
+    return DeviceModel(flops, bw, lat, exec_overhead=pod.exec_overhead,
+                       mem_bytes=np.full(n, 16e9),
+                       name=f"two_pod_v5e_{rows}x{cols}")
+
+
+def straggler_box(n: int = 8, straggler: int = 0,
+                  slowdown: float = 0.5) -> DeviceModel:
+    """Uniform box with one device running at `slowdown` x the fleet rate —
+    the classic mixed-bin / thermally-throttled straggler scenario."""
+    base = uniform_box(n)
+    speed = np.ones(n)
+    speed[straggler] = slowdown
+    out = scale_fleet(base, speed=speed, name=f"straggler{n}")
+    out.mem_bytes = np.full(n, 16e9)
+    return out
+
+
 PRESETS = {
     "p100x4": lambda: p100_box(4),
     "v100x8": v100_two_groups,
     "tpu_v5e_2x2": lambda: tpu_v5e_slice(2, 2),
     "tpu_v5e_4x4": lambda: tpu_v5e_slice(4, 4),
     "tpu_v5e_16x16": lambda: tpu_v5e_slice(16, 16),
+    # heterogeneous fleets (per-device speed/memory, asymmetric links)
+    "mixed_gen4": lambda: mixed_generation_box(2, 2),
+    "mixed_gen6": lambda: mixed_generation_box(4, 2),
+    "two_pod_2x2": lambda: two_pod_fleet(2, 2),
+    "straggler8": lambda: straggler_box(8),
 }
+
+# The heterogeneous subset — what benchmarks/zoo_sweep.py sweeps over.
+HETERO_FLEETS = ("mixed_gen4", "two_pod_2x2", "straggler8")
 
 
 def get_device_model(name: str) -> DeviceModel:

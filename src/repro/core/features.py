@@ -134,6 +134,8 @@ class EpisodeState:
         self.est_end = np.zeros(n)              # estimated completion per vertex
         self.device_avail = np.zeros(nd)        # estimated device free time
         self.dev_comp = np.zeros(nd)            # feature 0 accumulator
+        self.dev_bytes = np.zeros(nd)           # bytes resident per device
+                                                # (memory-aware placement)
         # candidate frontier bookkeeping
         self.unassigned_preds = np.array([len(g.preds[v]) for v in range(n)])
         self.candidate = np.zeros(n, dtype=bool)
@@ -193,6 +195,7 @@ class EpisodeState:
         self.est_end[v] = start + dur
         self.device_avail[d] = start + dur
         self.dev_comp[d] += self._flops[v]
+        self.dev_bytes[d] += g.vertices[v].out_bytes
         self.assigned[v] = d
         self.placed[v] = True
         self.candidate[v] = False

@@ -166,17 +166,32 @@ class DataflowGraph:
         return ordered
 
     # ------------------------------------------------------------ misc
-    def critical_path_lower_bound(self, flops_per_sec: float) -> float:
-        """Longest pure-compute path (seconds) — a makespan lower bound."""
+    def critical_path_lower_bound(self, flops_per_sec) -> float:
+        """Longest pure-compute path (seconds) — a makespan lower bound.
+
+        `flops_per_sec` may be a scalar rate or a per-device array
+        (heterogeneous fleet), in which case each vertex optimistically
+        runs on the fastest device — still a valid lower bound."""
+        rate = float(np.max(flops_per_sec))
         n = self.n
         dp = np.zeros(n)
         for v in reversed(self.topo_order):
-            t = self.vertices[v].flops / flops_per_sec
+            t = self.vertices[v].flops / rate
             best = 0.0
             for w in self.succs[v]:
                 best = max(best, dp[w])
             dp[v] = t + best
         return float(dp.max(initial=0.0))
+
+    def bytes_per_device(self, assignment: Sequence[int], n_devices: int
+                         ) -> np.ndarray:
+        """(n_devices,) bytes resident per device under `assignment`: the
+        sum of output-tensor sizes of the vertices placed there — the
+        memory profile checked against ``DeviceModel.mem_bytes``."""
+        a = np.asarray(assignment)
+        out = np.zeros(n_devices)
+        np.add.at(out, a, self.out_bytes_array())
+        return out
 
     def total_flops(self) -> float:
         return float(sum(v.flops for v in self.vertices))

@@ -33,8 +33,14 @@ def cp_select(state: EpisodeState, t_level: np.ndarray,
 
 
 def etf_place(state: EpisodeState, v: int,
-              rng: np.random.Generator | None = None) -> int:
-    """Earliest-task-finish device for v under the ETF estimator."""
+              rng: np.random.Generator | None = None,
+              respect_memory: bool = True) -> int:
+    """Earliest-task-finish device for v under the ETF estimator.
+
+    On fleets that model per-device memory (``dev.mem_bytes``), devices
+    whose residency would overflow are excluded — unless every device
+    would overflow, in which case plain ETF applies (the assignment is
+    infeasible either way and the simulator does not model paging)."""
     g, dev = state.g, state.dev
     nd = dev.n
     finish = np.empty(nd)
@@ -46,6 +52,10 @@ def etf_place(state: EpisodeState, v: int,
         start = max(state.device_avail[d], ready)
         dur = dev.exec_time(g.vertices[v].flops, d) if not g.is_input(v) else 0.0
         finish[d] = start + dur
+    if respect_memory and dev.mem_bytes is not None:
+        over = state.dev_bytes + g.vertices[v].out_bytes > dev.mem_bytes
+        if not over.all():
+            finish = np.where(over, np.inf, finish)
     best = finish.min()
     ties = np.flatnonzero(finish <= best * (1 + 1e-12))
     if rng is not None and len(ties) > 1:

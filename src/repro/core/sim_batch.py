@@ -87,8 +87,9 @@ class CompiledGraph:
         out_bytes = graph.out_bytes_array()
         # Same expression as DeviceModel.exec_time (overhead + flops / rate):
         # elementwise IEEE ops, so the table is bit-identical to the serial
-        # engine's per-call results.
-        exec_cost = devices.exec_overhead + \
+        # engine's per-call results — including heterogeneous fleets with
+        # per-device rates and launch overheads.
+        exec_cost = devices.exec_overhead_vec[None, :] + \
             flops[:, None] / devices.flops_per_sec[None, :]
         depth = np.zeros(n)
         for v in reversed(graph.topo_order):

@@ -50,11 +50,19 @@ _KIND_MAP = {
 
 
 def _out_size_bytes(aval) -> float:
-    try:
-        return float(np.prod(aval.shape, dtype=np.float64)
-                     * np.dtype(aval.dtype).itemsize)
-    except Exception:
+    shape = getattr(aval, "shape", None)
+    if shape is None:
         return 0.0
+    elems = float(np.prod(shape, dtype=np.float64)) if len(shape) else 1.0
+    dtype = getattr(aval, "dtype", None)
+    try:
+        itemsize = np.dtype(dtype).itemsize
+    except Exception:
+        # non-numpy dtypes (prng keys, float0, ...): trust the dtype's own
+        # itemsize when it has one, else assume 4 bytes — never 0, which
+        # would make every downstream transfer of this value free.
+        itemsize = getattr(dtype, "itemsize", None) or 4
+    return elems * float(itemsize)
 
 
 def _flops_of(eqn) -> float:
@@ -87,14 +95,20 @@ def _kind_of(eqn) -> str:
 
 def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
                    fuse_cheap: bool = True,
-                   cheap_flops: float = 1e4) -> DataflowGraph:
+                   cheap_flops: float = 1e4,
+                   arg_labels=None) -> DataflowGraph:
     """Trace `fn` on example args (arrays or ShapeDtypeStructs) and import
     the closed jaxpr as a DataflowGraph.
 
     fuse_cheap: absorb near-zero-cost vertices (reshapes, tiny scalars) into
     their consumer — keeps the assignment problem at kernel granularity,
     matching the paper's graphs (which are kernel calls, not HLO
-    minutiae)."""
+    minutiae).  Vertex labels are stable: primitives that carry a
+    ``name=`` param (pjit, custom calls) keep it, and fusion preserves the
+    surviving root's label (see :func:`_fuse_cheap`).
+
+    arg_labels: optional input-vertex labels, one per *flattened* invar
+    (e.g. pytree key paths); falls back to ``arg{i}``."""
     closed = jax.make_jaxpr(fn)(*example_args)
     jaxpr = closed.jaxpr
     g = DataflowGraph(name)
@@ -108,8 +122,10 @@ def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
         return producer[var]
 
     for i, var in enumerate(jaxpr.invars):
+        lbl = (arg_labels[i] if arg_labels is not None
+               and i < len(arg_labels) else f"arg{i}")
         producer[var] = g.add_vertex(
-            "input", out_bytes=_out_size_bytes(var.aval), label=f"arg{i}",
+            "input", out_bytes=_out_size_bytes(var.aval), label=lbl,
             out_shape=tuple(var.aval.shape))
     for i, var in enumerate(jaxpr.constvars):
         producer[var] = g.add_vertex(
@@ -121,9 +137,13 @@ def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
         kind = _kind_of(eqn)
         flops = _flops_of(eqn)
         out_bytes = sum(_out_size_bytes(ov.aval) for ov in eqn.outvars)
+        # stable op name: prefer the primitive's own name= param (pjit,
+        # custom_jvp_call, ...) over the generic primitive name
+        custom = eqn.params.get("name") if isinstance(
+            eqn.params.get("name"), str) else None
         v = g.add_vertex(kind, flops=flops, out_bytes=out_bytes,
                          meta_op=meta, role="shard",
-                         label=eqn.primitive.name,
+                         label=custom or eqn.primitive.name,
                          out_shape=tuple(eqn.outvars[0].aval.shape))
         meta += 1
         for iv in eqn.invars:
@@ -144,7 +164,12 @@ def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
 
 def _fuse_cheap(g: DataflowGraph, cheap_flops: float) -> DataflowGraph:
     """Collapse vertices with negligible cost and exactly one consumer into
-    that consumer (kernel-granularity view)."""
+    that consumer (kernel-granularity view).
+
+    The surviving root keeps its own (stable) label — or, for graphs from
+    other sources whose roots may be unlabeled, inherits the label of the
+    topo-first absorbed vertex that has one — and absorbs the fused
+    vertices' flops so the graph's total compute is conserved."""
     absorb_into = {}
     for v in g.topo_order:
         vert = g.vertices[v]
@@ -158,13 +183,26 @@ def _fuse_cheap(g: DataflowGraph, cheap_flops: float) -> DataflowGraph:
             v = absorb_into[v]
         return v
 
+    extra_flops: dict[int, float] = {}
+    inherited_label: dict[int, str] = {}
+    for v in g.topo_order:              # topo order: earliest label wins
+        if v not in absorb_into:
+            continue
+        r = root(v)
+        vert = g.vertices[v]
+        extra_flops[r] = extra_flops.get(r, 0.0) + vert.flops
+        if vert.label and r not in inherited_label:
+            inherited_label[r] = vert.label
+
     keep = [v for v in range(g.n) if v not in absorb_into]
     remap = {v: i for i, v in enumerate(keep)}
     out = DataflowGraph(g.name)
     for v in keep:
         vert = g.vertices[v]
-        out.add_vertex(vert.kind, vert.flops, vert.out_bytes, vert.meta_op,
-                       vert.role, vert.label, vert.out_shape)
+        out.add_vertex(vert.kind, vert.flops + extra_flops.get(v, 0.0),
+                       vert.out_bytes, vert.meta_op, vert.role,
+                       vert.label or inherited_label.get(v, ""),
+                       vert.out_shape)
     edges = set()
     for (s, d) in g.edges:
         rs, rd = root(s), root(d)

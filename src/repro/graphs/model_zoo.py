@@ -1,0 +1,142 @@
+"""Real-model workload zoo: registry configs -> placement-ready graphs.
+
+DOPPLER's generalization claim needs real ML workloads, not only the four
+Appendix-D synthetic graphs.  This module bridges the architecture
+registry (``repro/configs``: gemma, qwen, zamba2, xlstm, MoEs, ...) and
+the assignment stack: for each architecture it traces ONE repetition of
+the model's block pattern — its "layer", the unit that is replicated over
+depth and whose per-block assignment the paper scales out in Appendix I —
+in train mode through :func:`repro.graphs.jaxpr_import.jaxpr_to_graph`,
+yielding a :class:`DataflowGraph` with FLOP/byte costs at real model
+dimensions.
+
+The trace is fully abstract (``jax.eval_shape`` for the parameters,
+``ShapeDtypeStruct`` activations), so importing the 110B-parameter qwen
+config costs milliseconds and no memory.  Cheap-vertex fusion keeps the
+graphs at kernel granularity (~100-500 vertices per layer).
+
+Every model is addressable through the workload registry::
+
+    from repro.graphs.workloads import get_workload
+    g = get_workload("model:gemma_2b")        # any registry arch id/alias
+
+Input vertices carry the parameter pytree path as their label
+(``block0.core.w_in`` ...), equation vertices the jax primitive name.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ALIASES, ARCH_IDS, get_config
+from ..core.graph import DataflowGraph
+from ..models.common import dtype_of
+from ..models.transformer import _block_apply, _init_attn_block, _init_block
+from .jaxpr_import import jaxpr_to_graph
+
+DEFAULT_SEQ = 256
+
+
+def zoo_model_names() -> tuple:
+    """All importable architecture ids (the registry's ARCH_IDS)."""
+    return ARCH_IDS
+
+
+def canonical_arch(name: str) -> str:
+    """Normalize an arch id/alias ('gemma-2b' -> 'gemma_2b')."""
+    arch = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown model {name!r}; have {ARCH_IDS}")
+    return arch
+
+
+def _clean_path(path) -> str:
+    """jax key path -> dotted label: [0][2]['core']['w_in'] -> 0.2.core.w_in"""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k).strip("[]'\""))
+    return ".".join(parts)
+
+
+def layer_spec(cfg, *, seq: int = DEFAULT_SEQ, batch: int = 1,
+               unit_blocks: int | None = None):
+    """(fn, example_args, arg_labels) for one pattern-unit forward pass.
+
+    `unit_blocks` truncates long pattern units (xlstm's is 8 blocks) to
+    the first k entries — a representative sub-layer for cheap sweeps."""
+    unit = tuple(cfg.block_pattern)
+    if unit_blocks is not None:
+        unit = unit[:max(1, unit_blocks)]
+    dtype = dtype_of(cfg.param_dtype)
+
+    def init(key):
+        ks = jax.random.split(key, len(unit) + 1)
+        shared = (_init_attn_block(ks[-1], cfg, dtype)
+                  if "attn_shared" in unit else None)
+        blocks = [None if kind == "attn_shared"
+                  else _init_block(ks[i], kind, cfg, dtype)
+                  for i, kind in enumerate(unit)]
+        return blocks, shared
+
+    params = jax.eval_shape(init, jax.random.PRNGKey(0))
+
+    def layer(blocks_and_shared, x, positions):
+        blocks, shared = blocks_and_shared
+        for i, kind in enumerate(unit):
+            x, _, _ = _block_apply(kind, blocks[i], shared, cfg, x,
+                                   positions, "train", None, None)
+        return x
+
+    x = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                             dtype_of(cfg.compute_dtype))
+    pos = jax.ShapeDtypeStruct((1, seq), jnp.int32)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    prefix = {i: f"block{i}.{kind}" for i, kind in enumerate(unit)}
+    labels = []
+    for path, _leaf in flat:
+        lbl = _clean_path(path)
+        head = lbl.split(".", 2)
+        if head[0] == "0" and len(head) > 1 and head[1].isdigit():
+            # (blocks, shared) tuple: [0][i]... is block i of the unit
+            lbl = prefix[int(head[1])] + ("." + head[2] if len(head) > 2
+                                          else "")
+        elif head[0] == "1":
+            lbl = "shared_attn" + lbl[1:]
+        labels.append(lbl)
+    labels += ["x", "positions"]
+    return layer, (params, x, pos), labels
+
+
+def import_model(name: str, *, seq: int = DEFAULT_SEQ, batch: int = 1,
+                 unit_blocks: int | None = None, fuse_cheap: bool = True,
+                 cheap_flops: float = 1e4) -> DataflowGraph:
+    """Trace one layer of registry model `name` into a DataflowGraph.
+
+    Graphs are cached per (arch, shape) — they are frozen/immutable, so
+    sharing is safe; aliases hit the same cache entry."""
+    return _import_model(canonical_arch(name), seq, batch, unit_blocks,
+                         fuse_cheap, cheap_flops)
+
+
+@functools.lru_cache(maxsize=64)
+def _import_model(arch: str, seq: int, batch: int,
+                  unit_blocks: int | None, fuse_cheap: bool,
+                  cheap_flops: float) -> DataflowGraph:
+    cfg = get_config(arch)
+    fn, args, labels = layer_spec(cfg, seq=seq, batch=batch,
+                                  unit_blocks=unit_blocks)
+    return jaxpr_to_graph(fn, *args, name=f"model:{arch}",
+                          fuse_cheap=fuse_cheap, cheap_flops=cheap_flops,
+                          arg_labels=labels)
+
+
+def import_all(**kwargs) -> dict[str, DataflowGraph]:
+    """{arch: graph} for the full registry — the scenario zoo."""
+    return {a: import_model(a, **kwargs) for a in ARCH_IDS}

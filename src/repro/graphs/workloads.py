@@ -142,8 +142,26 @@ WORKLOADS = {
     "llama_layer": llama_layer,
 }
 
+MODEL_PREFIX = "model:"
+
+
+def list_workloads() -> list[str]:
+    """All addressable workload names: the four Appendix-D synthetic
+    graphs plus one ``model:<arch>`` entry per registry architecture."""
+    from .model_zoo import zoo_model_names
+    return sorted(WORKLOADS) + [MODEL_PREFIX + a for a in zoo_model_names()]
+
 
 def get_workload(name: str, **kwargs) -> DataflowGraph:
+    """Resolve a workload by name.
+
+    ``model:<arch>`` names import one layer of the registry architecture
+    through the jaxpr pipeline (see graphs/model_zoo.py); kwargs are
+    forwarded (seq=, batch=, unit_blocks=, cheap_flops=)."""
+    if name.startswith(MODEL_PREFIX):
+        from .model_zoo import import_model
+        return import_model(name[len(MODEL_PREFIX):], **kwargs)
     if name not in WORKLOADS:
-        raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
+        raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)} "
+                       f"plus '{MODEL_PREFIX}<arch>' (see list_workloads())")
     return WORKLOADS[name](**kwargs)

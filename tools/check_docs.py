@@ -1,0 +1,56 @@
+"""Docs smoke-checker: every ```python fence in README.md and docs/*.md
+must execute.
+
+Blocks within one file share a namespace (so a later block can use
+imports/variables from an earlier one), mirroring how a reader would
+paste them into one session.  Fences tagged anything other than `python`
+(```bash, ```text, ...) are ignored.
+
+Run:  python tools/check_docs.py          (from the repo root)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```[ \t]*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def main() -> int:
+    failures = 0
+    n_blocks = 0
+    for path in doc_files():
+        ns: dict = {"__name__": "__docs__"}
+        blocks = FENCE.findall(path.read_text())
+        for i, code in enumerate(blocks):
+            n_blocks += 1
+            t0 = time.time()
+            try:
+                exec(compile(code, f"{path.name}[block {i}]", "exec"), ns)
+                print(f"ok   {path.name}[{i}]  {time.time()-t0:.1f}s")
+            except Exception:
+                failures += 1
+                print(f"FAIL {path.name}[{i}]:")
+                traceback.print_exc()
+    if not n_blocks:
+        print("no python blocks found — nothing to check")
+        return 1
+    print(f"{n_blocks - failures}/{n_blocks} doc blocks executed cleanly")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
