@@ -1,0 +1,116 @@
+"""End-to-end Stage-II training throughput: the PR-2 batched path
+(`stage2_sim_batched`: vmapped sampling + numpy reward sweep + forced-
+replay gradient) vs the fused device-resident engine (`stage2_fused`:
+one jitted sample->score->update step, U updates per dispatch,
+train_fused.py), in updates/sec at batch=32.
+
+Rows (per workload: 512-vertex synthetic layered + the paper's
+llama layer):
+
+    train_<tag>_batched, us_per_update, upd_per_sec
+    train_<tag>_fused,   us_per_update, upd_per_sec + speedup + devices
+
+Protocol: both trainers run the canonical noise-free fifo Stage-II
+configuration (the zoo_sweep setting).  Timing alternates R rounds of
+each path and reports the per-path median (robust to the shared-CPU
+drift this container shows); the speedup is the ratio of medians.
+Correctness is cross-checked on every run: a small fused run must
+reproduce the reference `stage2_sim_batched(engine='serial')` reward
+trajectory (the same episodes are sampled bit-for-bit at eps=0).
+
+The acceptance bar for the 512-vertex case is >= 3x; a miss prints a
+warning, not a hard failure (wall-clock on shared CI boxes is noisy).
+
+Run via `python -m benchmarks.run train` (sets the 2-device XLA flag) or
+standalone: python benchmarks/bench_training.py
+"""
+from __future__ import annotations
+
+import os
+
+# must be set before jax initializes: the fused engine shards its episode
+# batch across XLA CPU devices (benchmarks/run.py injects the same flag)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=2")
+
+import time
+
+import numpy as np
+
+from common import FULL, budget, emit
+
+import jax
+
+from repro.core.devices import p100_box
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import llama_layer, synthetic_layered
+
+BATCH = 32
+ROUNDS = budget(3, 6)
+UPD_OLD = budget(2, 6)        # timed updates per round, old path
+UPD_FUSED = budget(12, 24)    # timed updates per round, fused path
+
+
+def _check_fused_matches_reference(graph, dev) -> None:
+    """Small-run guard: fused == reference trajectories (eps=0)."""
+    kw = dict(seed=0, d_hidden=16, total_episodes=200, eps0=0.0, eps1=0.0)
+    sim0 = WCSimulator(graph, dev, choose="fifo", noise_sigma=0.0)
+    ref = DopplerTrainer(graph, dev, **kw)
+    t_ref = ref.stage2_sim_batched(2, sim0, batch_size=4,
+                                   sim_engine="serial")
+    fus = DopplerTrainer(graph, dev, **kw)
+    t_fus = fus.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+    assert np.allclose(t_ref, t_fus, rtol=2e-4), \
+        "fused engine diverged from the reference Stage-II path"
+
+
+def bench_graph(tag: str, graph, dev, *, check_speedup: float | None = None):
+    n_devices = jax.local_device_count()
+    sim = WCSimulator(graph, dev, choose="fifo", noise_sigma=0.0)
+    tr_old = DopplerTrainer(graph, dev, seed=0, total_episodes=100_000)
+    tr_fused = DopplerTrainer(graph, dev, seed=0, total_episodes=100_000)
+
+    # compile both paths outside the timed region
+    tr_old.stage2_sim_batched(1, sim, batch_size=BATCH)
+    tr_fused.stage2_fused(UPD_FUSED, batch_size=BATCH,
+                          updates_per_dispatch=UPD_FUSED,
+                          n_devices=n_devices)
+
+    t_old, t_fused = [], []
+    for _ in range(ROUNDS):
+        t0 = time.perf_counter()
+        tr_old.stage2_sim_batched(UPD_OLD, sim, batch_size=BATCH)
+        t_old.append((time.perf_counter() - t0) / UPD_OLD)
+        t0 = time.perf_counter()
+        tr_fused.stage2_fused(UPD_FUSED, batch_size=BATCH,
+                              updates_per_dispatch=UPD_FUSED,
+                              n_devices=n_devices)
+        t_fused.append((time.perf_counter() - t0) / UPD_FUSED)
+    med_old = sorted(t_old)[len(t_old) // 2]
+    med_fused = sorted(t_fused)[len(t_fused) // 2]
+    speedup = med_old / med_fused
+
+    emit(f"train_{tag}_batched", med_old * 1e6,
+         f"upd_per_sec={1.0 / med_old:.2f} batch={BATCH} n={graph.n}")
+    emit(f"train_{tag}_fused", med_fused * 1e6,
+         f"upd_per_sec={1.0 / med_fused:.2f} speedup={speedup:.2f}x "
+         f"devices={n_devices}")
+    if check_speedup is not None and speedup < check_speedup:
+        print(f"# WARNING: train_{tag} fused speedup {speedup:.2f}x below "
+              f"the {check_speedup:.0f}x acceptance bar")
+    return speedup
+
+
+def main() -> None:
+    dev = p100_box()
+    g512 = synthetic_layered(32, 16)
+    _check_fused_matches_reference(g512, dev)
+    bench_graph("512v", g512, dev, check_speedup=3.0)
+    bench_graph("llama_layer", llama_layer(), dev)
+    if FULL:
+        bench_graph("1024v", synthetic_layered(64, 16), dev)
+
+
+if __name__ == "__main__":
+    main()

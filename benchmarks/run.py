@@ -1,51 +1,126 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Default budgets are
-CPU-reduced; set REPRO_FULL=1 for the paper's episode counts.
-Select subsets: python -m benchmarks.run table1 table2 ...
+Each module prints ``name,us_per_call,derived`` CSV rows; this runner
+executes every selected module in its own subprocess (isolated jax
+runtime, per-module env such as the multi-device XLA flag the fused
+training benchmark wants), streams the output through, and writes the
+parsed rows to ``BENCH_<tag>.json`` so the perf trajectory is machine
+readable.  Default budgets are CPU-reduced; set REPRO_FULL=1 for the
+paper's episode counts.  Select subsets: python -m benchmarks.run sim
+train table1 ...
 """
 from __future__ import annotations
 
-import importlib
+import json
 import os
+import re
+import subprocess
 import sys
 import time
-import traceback
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-sys.path.insert(0, os.path.dirname(__file__))
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(BENCH_DIR)
 
+# (tag, module, extra env) — env is applied before the subprocess starts,
+# i.e. before jax initializes in it.
 MODULES = [
-    ("sim", "bench_simulator"),
-    ("table1", "table1_wc_vs_sync"),
-    ("table2", "table2_methods"),
-    ("table3", "table3_ablation"),
-    ("table4", "table4_transfer"),
-    ("fig4", "fig4_stages"),
-    ("fig6", "fig6_scalability"),
-    ("table6", "table6_mp_ablation"),
-    ("table9", "table9_hardware"),
-    ("g1", "g1_sim_fidelity"),
-    ("roofline", "roofline"),
-    ("zoo", "zoo_sweep"),
+    ("sim", "bench_simulator", {}),
+    ("train", "bench_training",
+     {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}),
+    ("table1", "table1_wc_vs_sync", {}),
+    ("table2", "table2_methods", {}),
+    ("table3", "table3_ablation", {}),
+    ("table4", "table4_transfer", {}),
+    ("fig4", "fig4_stages", {}),
+    ("fig6", "fig6_scalability", {}),
+    ("table6", "table6_mp_ablation", {}),
+    ("table9", "table9_hardware", {}),
+    ("g1", "g1_sim_fidelity", {}),
+    ("roofline", "roofline", {}),
+    ("zoo", "zoo_sweep", {}),
 ]
+
+ROW_RE = re.compile(r"^([A-Za-z0-9_.:\-]+),(-?[0-9.eE+\-]+),(.*)$")
+
+
+def parse_derived(text: str) -> dict:
+    """'eps_per_sec=123.4 speedup=6.1x n=512' -> typed dict (trailing
+    'x' multipliers stripped); bare tokens become boolean flags."""
+    out: dict = {}
+    for tok in text.split():
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            raw = v[:-1] if v.endswith("x") and v[:-1].replace(
+                ".", "", 1).replace("-", "", 1).isdigit() else v
+            try:
+                out[k] = int(raw)
+            except ValueError:
+                try:
+                    out[k] = float(raw)
+                except ValueError:
+                    out[k] = v
+        else:
+            out[tok] = True
+    return out
+
+
+def run_module(tag: str, mod_name: str, env_extra: dict
+               ) -> tuple[bool, list[dict]]:
+    """Run one benchmark module in a subprocess; return (ok, rows)."""
+    env = {**os.environ, **env_extra}
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), BENCH_DIR,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    code = (f"import sys; sys.path.insert(0, {BENCH_DIR!r}); "
+            f"sys.path.insert(0, {ROOT!r}); "
+            f"import {mod_name}; {mod_name}.main()")
+    proc = subprocess.Popen([sys.executable, "-c", code], env=env,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    rows = []
+    assert proc.stdout is not None
+    for line in proc.stdout:
+        print(line, end="", flush=True)
+        m = ROW_RE.match(line.strip())
+        if m:
+            try:
+                us = float(m.group(2))
+            except ValueError:      # comma-bearing log line, not a row
+                continue
+            rows.append({"name": m.group(1),
+                         "us_per_call": us,
+                         "derived": parse_derived(m.group(3)),
+                         "derived_raw": m.group(3)})
+    proc.wait()
+    return proc.returncode == 0, rows
+
+
+def write_json(tag: str, rows: list[dict], elapsed: float) -> str:
+    out_dir = os.environ.get("REPRO_BENCH_DIR", os.getcwd())
+    path = os.path.join(out_dir, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump({"tag": tag, "elapsed_sec": round(elapsed, 1),
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "rows": rows}, f, indent=1)
+    return path
 
 
 def main() -> None:
     want = set(sys.argv[1:])
     failures = []
-    for tag, mod_name in MODULES:
+    for tag, mod_name, env_extra in MODULES:
         if want and tag not in want:
             continue
         t0 = time.time()
         print(f"# === {tag} ({mod_name}) ===", flush=True)
-        try:
-            mod = importlib.import_module(mod_name)
-            mod.main()
-            print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
-        except Exception:
+        ok, rows = run_module(tag, mod_name, env_extra)
+        elapsed = time.time() - t0
+        if not ok:
             failures.append(tag)
-            traceback.print_exc()
+            print(f"# {tag} FAILED after {elapsed:.0f}s", flush=True)
+            continue
+        path = write_json(tag, rows, elapsed)
+        print(f"# {tag} done in {elapsed:.0f}s -> {path}", flush=True)
     if failures:
         print(f"# FAILURES: {failures}")
         raise SystemExit(1)

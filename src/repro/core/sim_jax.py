@@ -1,0 +1,411 @@
+"""Device-resident WC reward oracle — a jit/vmap twin of the serial engine.
+
+``WCSimulator.run`` (and its compiled numpy twin ``sim_batch.run_plan``)
+evaluate Stage-II rewards on the host, which forces every fused training
+step to round-trip assignments through numpy.  This module keeps the whole
+reward computation inside XLA: :func:`makespan_fifo` replays one
+work-conserving episode as a fixed-trip ``lax.scan`` whose per-trip work is
+a handful of tiny array ops, so a K-episode reward batch is one fused
+device computation (`vmap`) that composes with the sampling rollout and
+the policy update into a single jitted train step (train_fused.py).
+
+Scope — the **noise-free 'fifo'** strategy only.  That is exactly the
+Stage-II sampling configuration of the fused engine; 'dfs'/'random'
+strategies and lognormal noise draw host RNG in a serial-dependent order
+and stay on the numpy engines (the bit-exact references).
+
+Equivalence contract (enforced by tests/test_sim_jax.py): the oracle makes
+the *same scheduling decisions* as ``WCSimulator.run(choose='fifo',
+noise_sigma=0)`` — identical task systems (one exec task per non-input
+vertex, one transfer per unique cross (producer, destination-device) pair),
+identical FIFO queue order (ready time, then the serial engine's insertion
+sequence), identical work-conserving start passes, identical completion
+order (end time, then start order) — but evaluates costs in float32
+(jax's default), so makespans match the float64 serial engine to floating
+-point tolerance rather than bit-for-bit.  See docs/SIMULATOR.md.
+
+How the serial schedule is replayed with static shapes and XLA-CPU
+friendly per-trip work (no large dense ops, no large scatters):
+
+* The task system is derived **on device** from the assignment: exec
+  durations are a gather from the ``(n, n_dev)`` cost table; each
+  non-input edge computes its canonical transfer slot (the first out-edge
+  of its producer targeting the same device — the insertion-ordered
+  ``consumers_on`` dedup of simulator.py) with one vectorized pass over
+  the padded out-edge rows.  Tasks live in one index space: exec ``v`` at
+  slot ``v``, the transfer of edge ``e`` at slot ``n + e``.
+* Each resource (``n_dev`` devices + ``n_dev²`` directed channels) keeps
+  its FIFO queue as an intrusive linked list (head/tail pointers plus a
+  per-task ``next``).  Insertion keys are globally increasing (trip index
+  × row width + emission position), replicating the serial ``(ready_time,
+  insertion order)`` queue keys, so append-at-tail preserves FIFO order.
+* One scan trip = one serial heap pop: a work-conserving start pass over
+  a small carried *candidate list* (only the resource freed by the last
+  completion and the ≤2C resources whose queue gained a task can start
+  anything — every other resource is busy or free-and-empty), then the
+  earliest completion is popped from a compact per-resource running
+  table, and the readiness updates it triggers are computed inside the
+  completed producer's padded out-edge row (≤C entries).  Completion ties
+  replay the serial heap's ``(end, start counter)`` via lexicographic
+  ``(end, start trip, ready time, kind/sequence key)`` argmin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .devices import DeviceModel
+from .graph import DataflowGraph
+
+F32_INF = jnp.float32(np.inf)
+I32_BIG = jnp.int32(2**31 - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimGraph:
+    """Static per-(graph, fleet) arrays for the device-resident oracle."""
+    # ---- arrays (pytree children)
+    is_input: jnp.ndarray      # (n,) bool
+    need0: jnp.ndarray         # (n,) int32 non-input indegree; inputs = -1
+    esrc: jnp.ndarray          # (m,) int32 producer of each non-input edge
+    edst: jnp.ndarray          # (m,) int32 consumer
+    edge_pos: jnp.ndarray      # (m,) int32 position in producer's out row
+    edge_valid: jnp.ndarray    # (m,) bool (False on padding)
+    out_row: jnp.ndarray       # (n, C) int32 out-edge ids per producer, -1 pad
+    exec_cost: jnp.ndarray     # (n, nd) f32, 0 rows for inputs
+    link_lat: jnp.ndarray      # (nd, nd) f32
+    link_bw: jnp.ndarray       # (nd, nd) f32
+    out_bytes: jnp.ndarray     # (n,) f32
+    # ---- static metadata (aux)
+    n: int = 0
+    nd: int = 0
+    m: int = 0                 # non-input edges (before padding)
+    C: int = 0                 # max non-input out-degree
+    n_compute: int = 0
+    n_trips: int = 0           # n_compute + m: upper bound on heap pops
+    seqw: int = 0              # per-trip insertion-sequence row width (2C)
+    koff: int = 0              # kind offset: transfer keys sort after execs
+
+    _ARRAYS = ("is_input", "need0", "esrc", "edst", "edge_pos", "edge_valid",
+               "out_row", "exec_cost", "link_lat", "link_bw", "out_bytes")
+    _AUX = ("n", "nd", "m", "C", "n_compute", "n_trips", "seqw", "koff")
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in self._ARRAYS),
+                tuple(getattr(self, f) for f in self._AUX))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def build(cls, graph: DataflowGraph, devices: DeviceModel) -> "SimGraph":
+        n, nd = graph.n, devices.n
+        is_input = np.array([graph.is_input(v) for v in range(n)], bool)
+        edges = graph.edge_array().reshape(-1, 2)
+        ni = edges[~is_input[edges[:, 0]]] if len(edges) else edges
+        m = len(ni)
+        mp = max(m, 1)                            # pad so shapes stay >0
+        esrc = np.zeros(mp, np.int32)
+        edst = np.zeros(mp, np.int32)
+        valid = np.zeros(mp, bool)
+        esrc[:m], edst[:m], valid[:m] = ni[:, 0], ni[:, 1], True
+        # position of each edge within its producer's out row — graph edge
+        # order, i.e. the serial engine's succs / consumers_on iteration
+        # order.
+        edge_pos = np.zeros(mp, np.int32)
+        rows: list[list[int]] = [[] for _ in range(n)]
+        for e in range(m):
+            p = int(esrc[e])
+            edge_pos[e] = len(rows[p])
+            rows[p].append(e)
+        C = max((len(r) for r in rows), default=0)
+        C = max(C, 1)
+        out_row = np.full((n, C), -1, np.int32)
+        for p, r in enumerate(rows):
+            out_row[p, :len(r)] = r
+        need0 = np.zeros(n, np.int64)
+        np.add.at(need0, edst[:m], 1)
+        need0[is_input] = -1
+        # tight trip bound: one completion per exec plus at most
+        # min(out-degree, n_dev - 1) canonical transfers per producer
+        outdeg = np.zeros(n, np.int64)
+        np.add.at(outdeg, esrc[:m], 1)
+        x_max = int(np.minimum(outdeg, nd - 1).sum()) if nd > 1 else 0
+        # same IEEE expressions as DeviceModel.exec_time / transfer_time,
+        # evaluated in f32 (the oracle's tolerance-bounded cost model)
+        flops = graph.flops_array()
+        exec_cost = (devices.exec_overhead_vec[None, :]
+                     + flops[:, None] / devices.flops_per_sec[None, :])
+        exec_cost[is_input] = 0.0
+        n_compute = int(n - is_input.sum())
+        seqw = 2 * C
+        # largest insertion sequence: n (init block) + trips * seqw
+        koff = n + (n_compute + m + 2) * seqw
+        if 2 * koff >= 2 ** 24:
+            raise ValueError(
+                f"graph too large for exact f32 queue keys "
+                f"(2*koff={2 * koff} >= 2^24); use the numpy engines")
+        return cls(
+            is_input=jnp.asarray(is_input),
+            need0=jnp.asarray(need0, jnp.int32),
+            esrc=jnp.asarray(esrc), edst=jnp.asarray(edst),
+            edge_pos=jnp.asarray(edge_pos), edge_valid=jnp.asarray(valid),
+            out_row=jnp.asarray(out_row),
+            exec_cost=jnp.asarray(exec_cost, jnp.float32),
+            link_lat=jnp.asarray(devices.link_latency, jnp.float32),
+            link_bw=jnp.asarray(devices.link_bw, jnp.float32),
+            out_bytes=jnp.asarray(graph.out_bytes_array(), jnp.float32),
+            n=n, nd=nd, m=m, C=C, n_compute=n_compute,
+            n_trips=n_compute + x_max, seqw=seqw, koff=koff,
+        )
+
+
+def _derive_tasks(sg: SimGraph, A):
+    """On-device per-assignment task system (the jit twin of
+    sim_batch.compile_assignment)."""
+    av = A.astype(jnp.int32)
+    sdev = av[sg.esrc]
+    ddev = av[sg.edst]
+    cross = sg.edge_valid & (sdev != ddev)
+    # canonical transfer slot per edge: first out-edge of the same producer
+    # with the same destination device (consumers_on first-edge order)
+    row = sg.out_row[sg.esrc]                            # (m, C)
+    row_dst = jnp.where(row >= 0, av[sg.edst[jnp.maximum(row, 0)]], -1)
+    same = row_dst == ddev[:, None]                      # (m, C)
+    first = jnp.argmax(same, axis=1).astype(jnp.int32)   # first True
+    canon_id = jnp.take_along_axis(row, first[:, None], axis=1)[:, 0]
+    is_canon = cross & (first == sg.edge_pos)
+    # an edge's readiness requirement: producer's exec if co-located, else
+    # the canonical transfer bringing the producer's result over
+    req = jnp.where(cross, sg.n + canon_id,
+                    jnp.where(sg.edge_valid, sg.esrc, -1))
+    edur = jnp.take_along_axis(sg.exec_cost, av[:, None], axis=1)[:, 0]
+    xdur = (sg.link_lat[sdev, ddev]
+            + sg.out_bytes[sg.esrc] / sg.link_bw[sdev, ddev])
+    res_x = sg.nd + sdev * sg.nd + ddev                  # channel resource id
+    return av, is_canon, req, edur, xdur, res_x
+
+
+@partial(jax.jit, static_argnames=())
+def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Noise-free 'fifo' WC makespan of one assignment.
+
+    Returns ``(makespan, ok)``; ``ok`` is False when the episode deadlocks
+    (the host wrapper raises, matching the numpy engines).
+
+    Performance shape: each resource's FIFO queue is an intrusive linked
+    list (head/tail pointers plus a per-task ``next``), the running tasks
+    live in a compact (R, 6) per-resource table, and every per-trip update
+    is a gather or a ≤C-index scatter — the work-conserving start pass
+    only examines the carried *candidate list* (the resource freed by the
+    last completion plus the ≤C whose queue gained a task; every other
+    resource is busy or free-and-empty, an invariant the pass maintains).
+    The trip loop is a ``while_loop`` that exits when the heap drains, so
+    an episode costs exactly its own completion count.  Queue keys are
+    exact-integer float32 (SimGraph.build guarantees keys < 2**24).
+    """
+    n, nd, C, mm = sg.n, sg.nd, sg.C, sg.esrc.shape[0]
+    av, is_canon, req, edur, xdur, res_x = _derive_tasks(sg, assignment)
+    N = n + mm                      # unified task space: execs then xfers
+    R = nd + nd * nd                # devices then directed channels
+    cpos = jnp.arange(C, dtype=jnp.int32)
+    dur = jnp.concatenate([edur, xdur])
+    res_of = jnp.concatenate([av, res_x])
+    F_BIG = jnp.float32(I32_BIG)
+
+    # ---- per-task queue state: tkn[:, 0] = insertion key (exact f32
+    # int), tkn[:, 1] = ready time, tkn[:, 2] = linked-list next pointer
+    ready0 = (sg.need0 == 0) & ~sg.is_input
+    fseq = jnp.arange(n, dtype=jnp.float32)
+
+    # initial per-device FIFO queues (vertex order): next pointer = the
+    # next seeded vertex on the same device (suffix-scan per device column)
+    oh = av[:, None] == jnp.arange(nd)[None, :]          # (n, nd)
+    colidx = jnp.where(oh & ready0[:, None],
+                       jnp.arange(n, dtype=jnp.int32)[:, None], I32_BIG)
+    sufmin = jax.lax.cummin(colidx[::-1], axis=0)[::-1]  # inclusive suffix
+    nxt0 = jnp.concatenate([sufmin[1:], jnp.full((1, nd), I32_BIG)])
+    nxt_v = jnp.take_along_axis(nxt0, av[:, None], axis=1)[:, 0]
+    tkn = jnp.stack([
+        jnp.where(ready0, fseq, F_BIG),
+        jnp.zeros(n),
+        jnp.where(ready0 & (nxt_v < I32_BIG), nxt_v.astype(jnp.float32),
+                  -1.0)], axis=1)
+    tkn = jnp.concatenate([tkn, jnp.tile(jnp.asarray([[F_BIG, 0.0, -1.0]]),
+                                         (mm, 1))])
+    hd0 = jnp.where(oh & ready0[:, None], colidx, I32_BIG).min(0)
+    tl0 = jnp.where(oh & ready0[:, None],
+                    jnp.arange(n, dtype=jnp.int32)[:, None], -1).max(0)
+    # hdtl[:, 0] = head task, hdtl[:, 1] = tail task (-1 = empty)
+    hdtl = jnp.full((R, 2), -1)
+    hdtl = hdtl.at[:nd, 0].set(
+        jnp.where(hd0 < I32_BIG, hd0, -1).astype(jnp.int32))
+    hdtl = hdtl.at[:nd, 1].set(tl0.astype(jnp.int32))
+
+    # run[:, :] = (end, start trip, ready time, key, task, free) per
+    # resource — one row scatter per start
+    run = jnp.zeros((R, 6))
+    run = run.at[:, 0].set(F32_INF)
+    run = run.at[:, 4].set(-1.0)
+
+    need = sg.need0
+    K = max(nd, C + 1)
+    cand = jnp.full(K, R, jnp.int32).at[:nd].set(
+        jnp.arange(nd, dtype=jnp.int32))
+
+    def trip(state):
+        (tkn, hdtl, run, need, cand, t, ms, n_done, trip_idx) = state
+        ftrip = trip_idx.astype(jnp.float32)
+
+        # ---- work-conserving start pass over candidate resources: a free
+        # resource starts its queue head (duplicate candidates are
+        # idempotent — same head, same writes)
+        cc = jnp.minimum(cand, R - 1)
+        crow = run[cc]                                   # (K, 6)
+        h = jnp.where(cand < R, hdtl[cc, 0], -1)         # head task or -1
+        # a resource whose task ends exactly at t counts as free in the
+        # serial engine before its completion pops; its run slot is still
+        # occupied here, so defer that start one trip (the pop at the same
+        # simulated time re-candidates the resource — start times, and
+        # therefore the schedule, are unchanged)
+        go = (h >= 0) & (crow[:, 5] <= t) & ~jnp.isfinite(crow[:, 0])
+        hh = jnp.maximum(h, 0)
+        end_c = t + dur[hh]
+        ridx = jnp.where(go, cc, R)                      # OOB drops
+        hrow = tkn[hh]                                   # (K, 3)
+        run = run.at[ridx].set(jnp.stack(
+            [end_c, jnp.full_like(end_c, ftrip), hrow[:, 1], hrow[:, 0],
+             hh.astype(jnp.float32), end_c], axis=1))
+        # pop: advance head; clear tail when the queue empties
+        hn = hrow[:, 2].astype(jnp.int32)
+        hdtl = hdtl.at[ridx].set(jnp.stack(
+            [hn, jnp.where(hn < 0, -1, hdtl[cc, 1])], axis=1))
+
+        # ---- pop the earliest completion from the running table; ties
+        # replay the serial heap's (end, start counter) via
+        # (end, start trip, ready time, kind/sequence key)
+        e1 = run[:, 0].min()
+        alive = jnp.isfinite(e1)
+        mk = run[:, 0] == e1
+        s1 = jnp.where(mk, run[:, 1], F_BIG).min()
+        mk &= run[:, 1] == s1
+        r1 = jnp.where(mk, run[:, 2], F32_INF).min()
+        mk &= run[:, 2] == r1
+        k1 = jnp.where(mk, run[:, 3], F_BIG).min()
+        rho = jnp.argmax(mk & (run[:, 3] == k1)).astype(jnp.int32)
+        c = jnp.where(alive, run[rho, 4].astype(jnp.int32), -1)
+        run = run.at[jnp.where(alive, rho, R), 0].set(F32_INF)
+        c_is_exec = alive & (c < n)
+        t = jnp.where(alive, e1, t)
+        ms = jnp.where(alive, e1, ms)
+        n_done = n_done + jnp.where(c_is_exec, 1, 0)
+
+        # ---- readiness triggered by c, computed in the completed
+        # producer's out-edge row (≤C entries), in the serial emission
+        # order: same-device successors (succ position), then transfers
+        # (C offset, consumers_on first-edge order).  Same-device edges
+        # and cross edges are disjoint, so one C-wide row covers both.
+        cx = jnp.minimum(jnp.maximum(c - n, 0), mm - 1)
+        p = jnp.where(c_is_exec, c, sg.esrc[cx])
+        prow = sg.out_row[jnp.clip(p, 0, n - 1)]         # (C,)
+        pe = jnp.maximum(prow, 0)
+        pvalid = (prow >= 0) & alive
+        ptrig = pvalid & (req[pe] == c)
+        pdst = sg.edst[pe]
+        need = need.at[jnp.where(ptrig, pdst, n)].add(
+            -ptrig.astype(jnp.int32))
+        # last decrement wins the emission slot: max triggered succ
+        # position per destination vertex (tiny C x C pass); parallel
+        # edges collapse onto that single slot
+        samew = pdst[:, None] == pdst[None, :]
+        maxpos = jnp.where(samew & ptrig[None, :], cpos[None, :], -1).max(1)
+        nw = ptrig & (need[pdst] == 0) & (cpos == maxpos)
+        nx = pvalid & c_is_exec & is_canon[pe]
+        i_live = nw | nx
+        base = n + trip_idx * sg.seqw
+        i_task = jnp.where(nw, pdst, jnp.where(nx, n + pe, N))
+        i_key = jnp.where(nw, base + maxpos, sg.koff + base + C + cpos)
+        i_res = jnp.where(i_live, res_of[jnp.minimum(i_task, N - 1)], R)
+        # within-trip chaining: link each entry to the next entry bound
+        # for the same resource (C x C pass); execs and transfers target
+        # disjoint resources, so row order = per-queue emission order
+        samer = (i_res[:, None] == i_res[None, :]) & i_live[None, :]
+        after = samer & (cpos[None, :] > cpos[:, None])
+        succ_k = jnp.where(after, cpos[None, :], C).min(1)
+        has_succ = succ_k < C
+        succ_task = i_task[jnp.minimum(succ_k, C - 1)]
+        is_first = ~(samer & (cpos[None, :] < cpos[:, None])).any(1) & i_live
+        is_last = ~has_succ & i_live
+        # one combined row scatter: (key, ready, chain-next) for the new
+        # entries plus the tail-append link from each queue's old tail
+        rtl = hdtl[jnp.minimum(i_res, R - 1), 1]
+        link_idx = jnp.where(is_first & (rtl >= 0), jnp.maximum(rtl, 0), N)
+        # new tasks and old tails are disjoint and internally deduped, so
+        # the combined row scatter has unique indices
+        tkn = tkn.at[jnp.concatenate([i_task, link_idx])].set(jnp.stack(
+            [jnp.concatenate([i_key.astype(jnp.float32), tkn[link_idx, 0]]),
+             jnp.concatenate([jnp.broadcast_to(t, (C,)), tkn[link_idx, 1]]),
+             jnp.concatenate([jnp.where(has_succ, succ_task, -1
+                                        ).astype(jnp.float32),
+                              i_task.astype(jnp.float32)])], axis=1),
+            unique_indices=True)
+        # every live entry writes its resource's FINAL (head, tail) row, so
+        # duplicate scatter indices all carry identical values
+        fst = jnp.where(samer & is_first[None, :], i_task[None, :], -1).max(1)
+        lst = jnp.where(samer & is_last[None, :], i_task[None, :], -1).max(1)
+        old_hd = hdtl[jnp.minimum(i_res, R - 1), 0]
+        hdtl = hdtl.at[jnp.where(i_live, i_res, R)].set(
+            jnp.stack([jnp.where(rtl < 0, fst, old_hd), lst], axis=1))
+
+        cand = jnp.concatenate([i_res, jnp.where(alive, rho, R)[None]])
+        if K > C + 1:
+            cand = jnp.concatenate([cand, jnp.full(K - C - 1, R,
+                                                   jnp.int32)])
+
+        return (tkn, hdtl, run, need, cand, t, ms, n_done, trip_idx + 1)
+
+    state = (tkn, hdtl, run, need, cand, jnp.float32(0.0), jnp.float32(0.0),
+             jnp.int32(0), jnp.int32(0))
+    # fixed-trip scan: completions are bounded by n_trips; drained trips
+    # no-op (vmapped while_loop would pay a full-carry select per trip)
+    state = jax.lax.scan(lambda s, _: (trip(s), None), state, None,
+                         length=sg.n_trips + 1)[0]
+    ms, n_done = state[6], state[7]
+    return ms, n_done == sg.n_compute
+
+
+@jax.jit
+def makespan_fifo_batch(sg: SimGraph, assignments):
+    """(K, n) assignments -> ((K,) makespans, (K,) ok flags), one dispatch."""
+    return jax.vmap(lambda a: makespan_fifo(sg, a))(assignments)
+
+
+class JaxWCEngine:
+    """Host-friendly wrapper mirroring BatchWCEngine's surface for the
+    noise-free fifo case (the configuration the fused trainer uses)."""
+
+    def __init__(self, graph: DataflowGraph, devices: DeviceModel):
+        self.graph, self.devices = graph, devices
+        self.sim_graph = SimGraph.build(graph, devices)
+
+    def exec_time(self, assignment) -> float:
+        ms, ok = makespan_fifo(self.sim_graph,
+                               jnp.asarray(np.asarray(assignment)))
+        if not bool(ok):
+            raise RuntimeError("deadlock: episode never completed")
+        return float(ms)
+
+    def run_batch(self, assignments) -> np.ndarray:
+        A = np.asarray(assignments)
+        if A.ndim == 1:
+            A = A[None, :]
+        ms, ok = makespan_fifo_batch(self.sim_graph, jnp.asarray(A))
+        if not bool(np.asarray(ok).all()):
+            raise RuntimeError("deadlock: episode never completed")
+        return np.asarray(ms)

@@ -1,0 +1,550 @@
+"""Device-resident fused Stage-II engine: rollout -> reward -> update in
+one jitted dispatch.
+
+``stage2_sim_batched`` (the PR-2 reference path) pays three dispatches and
+two host<->device round-trips per update: a vmapped sampling rollout, a
+numpy reward sweep over the pulled-back assignments, and a forced-replay
+gradient pass that re-runs the whole |V|-step scan just to recompute the
+log-probs the sampling pass already evaluated.  This module collapses the
+update into one XLA computation, and scans U updates per dispatch:
+
+1. **Recorded sampling** (:func:`sample_episodes`): one forward scan per
+   episode that makes the *same decisions* as ``assign.rollout`` but draws
+   no RNG inside the loop — the whole per-step key chain
+   (``split(key, 3)`` per step, ``split(kv, 3)`` per pick) is precomputed
+   and the categorical draws become ``argmax(logp + G[s])`` against
+   precomputed gumbel tables, which is exactly how
+   ``jax.random.categorical`` is defined.  With ``eps == 0`` the sampled
+   actions are **bit-identical** to ``rollout``'s (the parity contract
+   with ``stage2_sim_batched``); with ``eps > 0`` the exploration draw
+   reuses the policy draw's gumbel row (each branch stays marginally
+   correct — only one is kept — but the joint stream differs from the
+   serial path's independent draw).  The scan records what the gradient
+   pass needs: actions, candidate masks, and the dynamic device features.
+2. **Reward oracle**: the sampled assignments are scored on-device by
+   ``sim_jax.makespan_fifo_batch`` — no host round-trip, rewards stay
+   inside the jit.
+3. **Scan-free policy gradient** (:func:`fused_pg_loss`): because the
+   candidate masks and device features are recorded (they depend only on
+   actions, not parameters), every step's SEL/PLC log-prob and entropy is
+   recomputed *in parallel over steps* — batched masked log-softmaxes and
+   an exclusive cumulative sum for the placed-vertex device embeddings —
+   instead of a second sequential scan.  Differentiating this gives the
+   same REINFORCE gradient as ``_pg_loss_and_grad_batch``'s forced
+   replay, to float tolerance, at a fraction of the cost.
+4. **Optimizer + running stats on device**: advantages use the same
+   running baseline/std bookkeeping as the host trainer (values carried
+   as f32 scalars), AdamW applies in the same dispatch, and
+   ``lax.scan`` over U updates makes a whole training chunk one XLA call.
+
+Ablation modes (paper Table 3) are plumbed through exactly like the
+reference path: heuristic-replaced policies still sample (their actions
+come from the CP/ETF rules) and their log-prob terms drop out of the
+loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from ..train.optim import AdamState, adamw_update
+from .assign import BIG, GraphData, _device_features, _etf_update
+from .nn import apply_mlp, leaky_relu, masked_log_softmax
+from .policies import episode_encodings, plc_logits
+from .sim_jax import SimGraph, makespan_fifo
+
+
+class RewardStats(NamedTuple):
+    """Device twin of DopplerTrainer's running reward statistics."""
+    r_sum: jnp.ndarray
+    r_sqsum: jnp.ndarray
+    r_count: jnp.ndarray
+
+    @classmethod
+    def make(cls, r_sum=0.0, r_sqsum=0.0, r_count=0):
+        return cls(jnp.float32(r_sum), jnp.float32(r_sqsum),
+                   jnp.int32(r_count))
+
+    def baseline(self):
+        """(mean, std) with the trainer's exact (0, 1) empty-stats case."""
+        cnt = jnp.maximum(self.r_count, 1).astype(jnp.float32)
+        mean = self.r_sum / cnt
+        var = jnp.maximum(self.r_sqsum / cnt - mean * mean, 1e-12)
+        has = self.r_count > 0
+        return (jnp.where(has, mean, 0.0),
+                jnp.where(has, jnp.sqrt(var), 1.0))
+
+    def update(self, rs):
+        return RewardStats(self.r_sum + rs.sum(),
+                           self.r_sqsum + (rs * rs).sum(),
+                           self.r_count + rs.shape[0])
+
+
+# ------------------------------------------------------------- RNG tables
+def _episode_rng_tables(keys, n: int, nd: int):
+    """Precompute every random draw of K sampling episodes, step-major.
+
+    Replays ``rollout``'s exact key chain: per step
+    ``key, kv, kd = split(key, 3)``; each ``pick`` then splits its key
+    into (categorical, uniform-categorical, bernoulli).  The categorical
+    gumbel tables reproduce ``jax.random.categorical``'s
+    ``argmax(gumbel(k, shape) + logits)`` bit-for-bit.  Tables are
+    generated directly in the scan's (step, episode, ...) layout so no
+    transpose of the big SEL table is ever materialized.
+    """
+    K = keys.shape[0]
+
+    def chain(ks, _):
+        out = jax.vmap(lambda k: jax.random.split(k, 3))(ks)  # (K, 3, 2)
+        return out[:, 0], (out[:, 1], out[:, 2])
+
+    _, (kvs, kds) = jax.lax.scan(chain, keys, None, length=n)  # (n, K, 2)
+    sel = jax.vmap(lambda k: jax.random.split(k, 3))(kvs.reshape(-1, 2))
+    plc = jax.vmap(lambda k: jax.random.split(k, 3))(kds.reshape(-1, 2))
+    g_sel = jax.vmap(lambda k: jax.random.gumbel(k, (n,)))(
+        sel[:, 0]).reshape(n, K, n)
+    g_plc = jax.vmap(lambda k: jax.random.gumbel(k, (nd,)))(
+        plc[:, 0]).reshape(n, K, nd)
+    u_sel = jax.vmap(jax.random.uniform)(sel[:, 2]).reshape(n, K)
+    u_plc = jax.vmap(jax.random.uniform)(plc[:, 2]).reshape(n, K)
+    return g_sel, g_plc, u_sel, u_plc
+
+
+# ------------------------------------------------- phase 1: record sample
+@partial(jax.jit, static_argnames=("sel_mode", "plc_mode"))
+def sample_episodes(params, gd: GraphData, keys, eps,
+                    sel_mode: str = "learned", plc_mode: str = "learned"):
+    """K recorded sampling episodes in one batch-explicit forward scan.
+
+    Returns dict with ``actions`` (K, n, 2), ``assignment`` (K, n),
+    ``x_dev`` (K, n, nd, 5) dynamic device features per step, and the
+    SEL-linearization recordings ``sel_p`` (K, n, n) softmax rows /
+    ``sel_lse`` / ``sel_ex`` (K, n) — everything :func:`fused_pg_loss`
+    needs to recompute log-probs without a second scan.
+
+    Actions are **bit-identical** to ``rollout``'s for the same keys when
+    ``eps == 0`` (the parity contract with ``stage2_sim_batched``): the
+    per-step key chain and gumbel tables replay
+    ``jax.random.categorical``'s draws exactly.  With ``eps > 0`` the
+    exploration pick reuses the policy pick's gumbel row (each branch
+    stays marginally correct — only one is kept — so the sampling
+    distribution is unchanged, but the joint stream differs from the
+    serial path's independent draw; see the module docstring).
+    """
+    n, nd = gd.n, gd.nd
+    K = keys.shape[0]
+    H, sel_logits, z_plc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+    dh = H.shape[1]
+    rng = _episode_rng_tables(keys, n, nd)
+    feats = jax.vmap(_device_features, in_axes=(None, 0, 0, 0, 0, 0, 0))
+    upd = jax.vmap(_etf_update, in_axes=(None, 0, 0, 0, 0))
+    karange = jnp.arange(K)
+
+    placed = jnp.zeros((K, n), dtype=bool)
+    assigned = jnp.zeros((K, n), dtype=jnp.int32)
+    est_end = jnp.zeros((K, n), dtype=jnp.float32)
+    device_avail = jnp.zeros((K, nd), dtype=jnp.float32)
+    dev_comp = jnp.zeros((K, nd), dtype=jnp.float32)
+    n_preds = (gd.preds >= 0).sum(1).astype(jnp.int32)
+    unassigned_preds = jnp.broadcast_to(
+        jnp.concatenate([n_preds, jnp.zeros(1, jnp.int32)]),
+        (K, n + 1))
+    dev_hsum = jnp.zeros((K, nd, dh), dtype=jnp.float32)
+    dev_cnt = jnp.zeros((K, nd), dtype=jnp.float32)
+
+    def step(carry, xs):
+        state = carry
+        gs, gp, us, up = xs                     # (K, n) (K, nd) (K,) (K,)
+        (placed, assigned, est_end, device_avail, dev_comp,
+         unassigned_preds, dev_hsum, dev_cnt) = state
+
+        cand = (~placed) & (unassigned_preds[:, :n] == 0)
+        logp_v = jax.vmap(masked_log_softmax, in_axes=(None, 0))(
+            sel_logits, cand)
+        v_soft = jnp.argmax(logp_v + gs, axis=-1)
+        # == argmax(where(cand, 0, -inf) + gs): -inf + g = -inf, 0 + g = g
+        v_unif = jnp.argmax(jnp.where(cand, gs, -jnp.inf), axis=-1)
+        v = jnp.where(us < eps, v_unif, v_soft).astype(jnp.int32)
+        if sel_mode == "cp":
+            v = jnp.argmax(jnp.where(cand, gd.t_level, -BIG),
+                           axis=-1).astype(jnp.int32)
+
+        x_dev, ready = feats(gd, v, placed, assigned, est_end,
+                             device_avail, dev_comp)
+        h_dev = dev_hsum / jnp.maximum(dev_cnt[..., None], 1.0)
+        logits_d = jax.vmap(plc_logits, in_axes=(None, 0, 0, 0, 0))(
+            params, H[v], h_dev, x_dev, z_plc[v])
+        logp_d = jax.vmap(masked_log_softmax, in_axes=(0, None))(
+            logits_d, jnp.ones(nd, dtype=bool))
+        d_soft = jnp.argmax(logp_d + gp, axis=-1)
+        d_unif = jnp.argmax(gp, axis=-1)
+        d = jnp.where(up < eps, d_unif, d_soft).astype(jnp.int32)
+        if plc_mode == "etf":
+            finish = (jnp.maximum(device_avail, ready)
+                      + gd.exec_time[v])
+            d = jnp.argmin(finish, axis=-1).astype(jnp.int32)
+
+        state = upd(gd, v, d, ready[karange, d], state)
+        (placed, assigned, est_end, device_avail, dev_comp,
+         unassigned_preds, dev_hsum, dev_cnt) = state
+        dev_hsum = dev_hsum.at[karange, d].add(H[v])
+        dev_cnt = dev_cnt.at[karange, d].add(1.0)
+        state = (placed, assigned, est_end, device_avail, dev_comp,
+                 unassigned_preds, dev_hsum, dev_cnt)
+        # record the SEL softmax row + scalars that make the SEL loss
+        # term linear in sel_logits (see fused_pg_loss)
+        p_row = jnp.exp(logp_v)
+        lse = (sel_logits[v]
+               - jnp.take_along_axis(logp_v, v[:, None], 1)[:, 0])
+        ex = (p_row * jnp.where(cand, sel_logits[None, :], 0.0)).sum(-1)
+        return state, (v, d, x_dev, p_row, lse, ex)
+
+    init = (placed, assigned, est_end, device_avail, dev_comp,
+            unassigned_preds, dev_hsum, dev_cnt)
+    state, (v_seq, d_seq, x_devs, sel_p, sel_lse, sel_ex) = jax.lax.scan(
+        step, init, rng)
+    # step-major -> episode-major
+    return {"actions": jnp.stack([v_seq, d_seq], -1).swapaxes(0, 1),
+            "assignment": state[1],
+            "x_dev": x_devs.swapaxes(0, 1),
+            "sel_p": sel_p.swapaxes(0, 1),
+            "sel_lse": sel_lse.swapaxes(0, 1),
+            "sel_ex": sel_ex.swapaxes(0, 1)}
+
+
+# ------------------------------------------- phase 2: parallel log-probs
+def _plc_step_logps(params, H, z_plc, nd: int, x_devs, v, d):
+    """Per-step PLC log-probs/entropies, parallel over steps.
+
+    PLC head1 on [H_v || h_dev || y || z_v] is evaluated as split
+    matmuls: the H_v / z_v blocks are (n, dh) matmuls gathered per step,
+    and the h_dev block commutes with the exclusive prefix sum (matmul
+    is linear), so the (K, S, nd, 2dh+dy+dz) concat never materializes.
+    Shared by the fused REINFORCE and imitation losses.
+    """
+    w1 = params["plc_head1"]["layers"][0]
+    dh = H.shape[1]
+    dy = params["plc_y"]["layers"][-1]["b"].shape[0]
+    w_h, w_hd, w_y, w_z = (w1["w"][:dh], w1["w"][dh:2 * dh],
+                           w1["w"][2 * dh:2 * dh + dy],
+                           w1["w"][2 * dh + dy:])
+    GH = H @ w_h + z_plc @ w_z + w1["b"]                # (n, hid)
+    GD = H @ w_hd                                       # (n, hid)
+    onehot = (d[..., None] == jnp.arange(nd)).astype(jnp.float32)
+    contrib = onehot[..., None] * GD[v][:, :, None, :]  # (K, S, nd, hid)
+    gsum = jnp.cumsum(contrib, axis=1) - contrib        # exclusive
+    cnt = jnp.cumsum(onehot, axis=1) - onehot
+    y = apply_mlp(params["plc_y"], x_devs)              # (K, S, nd, dy)
+    hid = leaky_relu(GH[v][:, :, None, :]
+                     + gsum / jnp.maximum(cnt[..., None], 1.0)
+                     + y @ w_y)
+    logits_d = apply_mlp(params["plc_head2"], hid)[..., 0]  # (K, S, nd)
+    pl = jax.nn.log_softmax(logits_d)
+    plc_logp = jnp.take_along_axis(pl, d[..., None], -1)[..., 0]
+    plc_ent = -(jnp.exp(pl) * pl).sum(-1)
+    return plc_logp, plc_ent
+
+
+def _parallel_step_logps(params, gd: GraphData, masks, x_devs, actions,
+                         sel: bool = True, plc: bool = True):
+    """Per-step SEL/PLC log-probs and entropies for recorded episodes,
+    evaluated in parallel over steps (no scan).
+
+    Returns ``(sel_logp, sel_ent, plc_logp, plc_ent)``, each (K, S) (or
+    None when the corresponding policy is disabled).
+    """
+    H, sel_logits, z_plc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+    v = actions[..., 0]                                     # (K, S)
+    d = actions[..., 1]
+    neg = jnp.finfo(sel_logits.dtype).min
+
+    sel_logp = sel_ent = plc_logp = plc_ent = None
+    if sel:
+        # one masked softmax pass yields the chosen log-prob and the
+        # entropy: H(p) = lse - E_p[logits] over the candidate set
+        z = jnp.where(masks, sel_logits[None, None, :], neg)
+        zmax = z.max(-1)
+        ez = jnp.exp(z - zmax[..., None])
+        sez = ez.sum(-1)
+        lse = jnp.log(sez) + zmax
+        sel_logp = (jnp.take_along_axis(z, v[..., None], -1)[..., 0]
+                    - lse)                                  # (K, S)
+        e_logits = jnp.where(masks, ez * z, 0.0).sum(-1) / sez
+        sel_ent = lse - e_logits
+    if plc:
+        plc_logp, plc_ent = _plc_step_logps(params, H, z_plc, gd.nd,
+                                            x_devs, v, d)
+    return sel_logp, sel_ent, plc_logp, plc_ent
+
+
+def fused_pg_loss(params, gd: GraphData, rec, advs, entropy_w,
+                  sel_learned: bool = True, plc_learned: bool = True):
+    """Batch REINFORCE surrogate with all steps evaluated in parallel.
+
+    Same math as ``training._pg_loss_and_grad_batch``'s forced replay —
+    per episode ``-(adv * logp + w * ent)`` with ``logp`` the summed step
+    log-probs and ``ent`` the mean step entropies, averaged over the
+    batch — but evaluated without a second |V|-step scan:
+
+    * **SEL** is linear in the episode-static ``sel_logits``, so with the
+      softmax rows recorded at the sampling parameters the whole term is
+      written as ``value + coeff · (x - stop_grad(x))``: exact value AND
+      exact gradient (``d logp/dx = onehot - p``,
+      ``d ent/dx_j = -p_j (x_j - E_p[x])``), with the (K, S, n)
+      recordings pre-reduced to (K, n) coefficients outside autodiff.
+    * **PLC** is rebuilt from the recorded (parameter-free) device
+      features and placement order: the placed-vertex mean embeddings
+      become an exclusive prefix sum and head1 splits into per-block
+      matmuls, so gradients flow through the GNN exactly as in the
+      replay.
+    """
+    H, sel_logits, z_plc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+    nd = gd.nd
+    actions = rec["actions"]
+    v = actions[..., 0]                                     # (K, S)
+    d = actions[..., 1]
+    S = v.shape[1]
+
+    logp = 0.0
+    ent = 0.0
+    if sel_learned:
+        x = sel_logits
+        dx = x - jax.lax.stop_gradient(x)                   # 0-valued
+        p = jax.lax.stop_gradient(rec["sel_p"])             # (K, S, n)
+        lse0 = jax.lax.stop_gradient(rec["sel_lse"])        # (K, S)
+        ex0 = jax.lax.stop_gradient(rec["sel_ex"])          # (K, S)
+        P = p.sum(1)                                        # (K, n)
+        Q = jnp.einsum("ksn,ks->kn", p, ex0)                # (K, n)
+        sel_logp_sum = (x[v].sum(-1) - lse0.sum(-1)
+                        - (P * dx[None, :]).sum(-1))
+        coeff = -(P * jax.lax.stop_gradient(x)[None, :] - Q) / S
+        sel_ent_mean = ((lse0 - ex0).mean(-1)
+                        + (coeff * dx[None, :]).sum(-1))
+        logp = logp + sel_logp_sum
+        ent = ent + sel_ent_mean
+    if plc_learned:
+        plc_logp, plc_ent = _plc_step_logps(params, H, z_plc, nd,
+                                            rec["x_dev"], v, d)
+        logp = logp + plc_logp.sum(-1)
+        ent = ent + plc_ent.mean(-1)
+    return (-(advs * logp + entropy_w * ent)).mean()
+
+
+# --------------------------------------------------------- fused updates
+@dataclasses.dataclass(frozen=True)
+class FusedStage2Config:
+    """Static configuration of one fused Stage-II chunk."""
+    batch_size: int
+    updates: int                  # scan length of one dispatch
+    sel_mode: str = "learned"
+    plc_mode: str = "learned"
+    sel_learned: bool = True
+    plc_learned: bool = True
+    normalize_adv: bool = True
+    entropy_weight: float = 1e-2
+
+
+def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
+                       sg: SimGraph, lr_sched, eps_sched,
+                       n_devices: int = 1):
+    """Compile a ``train_chunk(params, opt, rstats, key, episode)`` that
+    runs ``cfg.updates`` fused Stage-II updates in one XLA dispatch.
+
+    Each inner update replays the reference path's bookkeeping exactly:
+    the trainer key splits once per update, the batch keys split off it,
+    eps/lr come from the schedules at the pre-update episode counter, the
+    advantage uses the running baseline (batch mean when empty) and the
+    ``max(running std, batch std)`` normalizer, and the running stats are
+    updated after the gradient — see ``DopplerTrainer.stage2_sim_batched``.
+
+    With ``n_devices > 1`` the chunk is ``pmap``-ed: every device carries
+    replicated policy/optimizer state, samples and scores its
+    ``batch_size / n_devices`` episode shard, and the gradient /
+    advantage statistics are combined with ``pmean``/``psum`` collectives
+    — the fused engine's data-parallel scale-out (the same episode keys
+    are drawn, so the sampled population is identical to the
+    single-device path; only float reduction order differs).
+    """
+    if cfg.batch_size % n_devices:
+        raise ValueError(f"batch_size {cfg.batch_size} not divisible by "
+                         f"{n_devices} devices")
+    kb = cfg.batch_size // n_devices
+    pmapped = n_devices > 1
+
+    def one_update(carry, _):
+        params, opt_state, rstats, key, episode = carry
+        key, sub = jax.random.split(key)
+        eps = eps_sched(episode)
+        keys = jax.random.split(sub, cfg.batch_size)
+        if pmapped:
+            keys = jax.lax.dynamic_slice_in_dim(
+                keys, jax.lax.axis_index("batch") * kb, kb)
+        rec = sample_episodes(params, gd, keys, eps,
+                              sel_mode=cfg.sel_mode, plc_mode=cfg.plc_mode)
+        ms, _ok = jax.vmap(lambda a: makespan_fifo(sg, a))(
+            rec["assignment"])
+        rs = jax.lax.stop_gradient(-ms)
+        if pmapped:
+            batch_mean = jax.lax.pmean(rs.mean(), "batch")
+            batch_sq = jax.lax.pmean((rs * rs).mean(), "batch")
+            batch_std = jnp.sqrt(jnp.maximum(
+                batch_sq - batch_mean * batch_mean, 0.0))
+        else:
+            batch_mean, batch_std = rs.mean(), rs.std()
+        mean, std = rstats.baseline()
+        advs = rs - jnp.where(rstats.r_count > 0, mean, batch_mean)
+        if cfg.normalize_adv:
+            advs = advs / (jnp.maximum(std, batch_std) + 1e-9)
+        advs = jax.lax.stop_gradient(advs)
+
+        loss, grads = jax.value_and_grad(fused_pg_loss)(
+            params, gd, rec, advs, jnp.float32(cfg.entropy_weight),
+            sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned)
+        if pmapped:
+            # one fused all-reduce: flattened grads + loss + reward sums
+            flat, unravel = ravel_pytree(grads)
+            flat = jnp.concatenate([
+                flat, jnp.stack([loss, rs.sum(), (rs * rs).sum()])])
+            flat = jax.lax.pmean(flat, "batch")
+            grads = unravel(flat[:-3])
+            loss = flat[-3]
+            rstats = RewardStats(
+                rstats.r_sum + flat[-2] * n_devices,
+                rstats.r_sqsum + flat[-1] * n_devices,
+                rstats.r_count + cfg.batch_size)
+        else:
+            rstats = rstats.update(rs)
+        params, opt_state = adamw_update(grads, opt_state, params,
+                                         lr_sched(episode))
+        episode = episode + cfg.batch_size
+        # ship only this shard's best assignment back to the host
+        best_k = jnp.argmin(ms)
+        return ((params, opt_state, rstats, key, episode),
+                (ms, rec["assignment"][best_k], loss))
+
+    def chunk(params, opt_state: AdamState, rstats: RewardStats,
+              key, episode, _dev_dummy=None):
+        carry = (params, opt_state, rstats, key, episode)
+        carry, (ms, best_a, losses) = jax.lax.scan(
+            one_update, carry, None, length=cfg.updates)
+        params, opt_state, rstats, key, episode = carry
+        return {"params": params, "opt_state": opt_state, "rstats": rstats,
+                "key": key, "episode": episode, "makespans": ms,
+                "best_assignments": best_a, "losses": losses}
+
+    if not pmapped:
+        return jax.jit(lambda p, o, r, k, e: chunk(p, o, r, k, e))
+
+    inner = jax.pmap(chunk, axis_name="batch",
+                     in_axes=(None, None, None, None, None, 0),
+                     devices=jax.local_devices()[:n_devices])
+    dev_dummy = jnp.arange(n_devices)
+
+    def sharded_chunk(params, opt_state, rstats, key, episode):
+        out = inner(params, opt_state, rstats, key, episode, dev_dummy)
+        # replicated leaves -> first copy; per-device episode shards ->
+        # episode-major makespans + the globally best shard row
+        first = jax.tree_util.tree_map(lambda x: x[0], out)
+        ms = out["makespans"]                       # (ndev, U, kb)
+        first["makespans"] = jnp.concatenate(
+            [ms[d] for d in range(n_devices)], axis=1)
+        windev = jnp.argmin(ms.min(axis=2), axis=0)             # (U,)
+        first["best_assignments"] = jnp.take_along_axis(
+            out["best_assignments"], windev[None, :, None], axis=0)[0]
+        first["losses"] = out["losses"][0]
+        return first
+
+    return sharded_chunk
+
+
+# ----------------------------------------------------- fused imitation
+def build_fused_stage1(gd: GraphData, lr_sched, batch_size: int,
+                       updates: int):
+    """Compile a Stage-I chunk: `updates` imitation steps per dispatch,
+    each averaging the NLL of `batch_size` pre-computed teacher episodes.
+
+    The teacher's dynamics (candidate masks, device features) are
+    parameter-free, so they are derived once per episode by a light
+    replay scan outside the update loop; every update is then a parallel
+    ``fused_pg_loss``-style NLL over its slice of teacher actions.
+    """
+
+    @jax.jit
+    def replay_dynamics(actions):
+        """(E, n, 2) teacher actions -> masks (E, n, n), x_dev."""
+        n, nd = gd.n, gd.nd
+
+        def one(acts):
+            placed = jnp.zeros(n, dtype=bool)
+            assigned = jnp.zeros(n, dtype=jnp.int32)
+            est_end = jnp.zeros(n, dtype=jnp.float32)
+            device_avail = jnp.zeros(nd, dtype=jnp.float32)
+            dev_comp = jnp.zeros(nd, dtype=jnp.float32)
+            n_preds = (gd.preds >= 0).sum(1).astype(jnp.int32)
+            unassigned_preds = jnp.concatenate(
+                [n_preds, jnp.zeros(1, jnp.int32)])
+            dev_hsum = jnp.zeros((nd, 1), dtype=jnp.float32)
+            dev_cnt = jnp.zeros(nd, dtype=jnp.float32)
+
+            def step(state, act):
+                v, dv = act[0], act[1]
+                (placed, assigned, est_end, device_avail, dev_comp,
+                 unassigned_preds, dev_hsum, dev_cnt) = state
+                cand = (~placed) & (unassigned_preds[:n] == 0)
+                x_dev, ready = _device_features(
+                    gd, v, placed, assigned, est_end, device_avail,
+                    dev_comp)
+                state = _etf_update(gd, v, dv, ready[dv], state)
+                return state, (cand, x_dev)
+
+            init = (placed, assigned, est_end, device_avail, dev_comp,
+                    unassigned_preds, dev_hsum, dev_cnt)
+            _, (masks, x_devs) = jax.lax.scan(step, init, acts)
+            return masks, x_devs
+
+        return jax.vmap(one)(actions)
+
+    def imitation_loss(params, masks, x_devs, actions):
+        """-(mean sel logp + mean plc logp) per episode, averaged over the
+        batch — the step-parallel twin of ``_imitation_loss_and_grad``."""
+        sel_logp, _, plc_logp, _ = _parallel_step_logps(
+            params, gd, masks, x_devs, actions)
+        return -(sel_logp.mean() + plc_logp.mean())
+
+    @jax.jit
+    def train_chunk(params, opt_state, key, episode, masks, x_devs,
+                    actions):
+        """masks/x_devs/actions: (updates, batch_size, ...) slices."""
+
+        def one_update(carry, xs):
+            params, opt_state, key, episode = carry
+            mk, xd, act = xs
+            loss, grads = jax.value_and_grad(imitation_loss)(
+                params, mk, xd, act)
+            params, opt_state = adamw_update(grads, opt_state, params,
+                                             lr_sched(episode))
+            # the loop path consumes one trainer key per teacher episode
+            key = jax.lax.fori_loop(
+                0, batch_size,
+                lambda _, k: jax.random.split(k)[0], key)
+            episode = episode + batch_size
+            return (params, opt_state, key, episode), loss
+
+        carry = (params, opt_state, key, episode)
+        carry, losses = jax.lax.scan(one_update, carry,
+                                     (masks, x_devs, actions),
+                                     length=updates)
+        params, opt_state, key, episode = carry
+        return {"params": params, "opt_state": opt_state, "key": key,
+                "episode": episode, "losses": losses}
+
+    return replay_dynamics, train_chunk

@@ -55,16 +55,28 @@ def _pg_loss_and_grad(params, gd: GraphData, key, actions, advantage,
     return jax.value_and_grad(loss_fn)(params)
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("sel_learned", "plc_learned"))
 def _pg_loss_and_grad_batch(params, gd: GraphData, keys, actions,
-                            advantages, entropy_w):
-    """Batch-averaged REINFORCE: K replayed episodes, one gradient."""
+                            advantages, entropy_w,
+                            sel_learned: bool = True,
+                            plc_learned: bool = True):
+    """Batch-averaged REINFORCE: K replayed episodes, one gradient.
+
+    Like `_pg_loss_and_grad`, the Table-3 ablation modes drop the
+    heuristic-replaced policy's log-prob/entropy terms from the loss, so
+    `stage2_sim_batched` trains only the learned head(s)."""
     def loss_fn(p):
         def one(key, act, adv):
             out = rollout(p, gd, key, jnp.float32(0.0), act,
                           jnp.array(True), greedy=False)
-            logp = out["sel_logp"].sum() + out["plc_logp"].sum()
-            ent = out["sel_ent"].mean() + out["plc_ent"].mean()
+            logp = 0.0
+            ent = 0.0
+            if sel_learned:
+                logp = logp + out["sel_logp"].sum()
+                ent = ent + out["sel_ent"].mean()
+            if plc_learned:
+                logp = logp + out["plc_logp"].sum()
+                ent = ent + out["plc_ent"].mean()
             return -(adv * logp + entropy_w * ent)
 
         return jax.vmap(one)(keys, actions, advantages).mean()
@@ -223,9 +235,49 @@ class DopplerTrainer:
                       f"best={self.best_time*1e3:.2f}ms")
         return times
 
+    def _batched_rl_update(self, reward_fn, batch_size: int, stage: str,
+                           sel_learned=None, plc_learned=None) -> np.ndarray:
+        """One population REINFORCE update: sample `batch_size` episodes in
+        a single vmapped rollout, score them with `reward_fn(assignments)
+        -> (K,) exec times`, and take one batch-averaged gradient step.
+        Shared by `stage2_sim_batched` and `FleetTrainer.train`."""
+        if sel_learned is None:
+            sel_learned = self.sel_mode == "learned"
+        if plc_learned is None:
+            plc_learned = self.plc_mode == "learned"
+        eps = self.eps_sched(self.episode)
+        keys = jax.random.split(self._next_key(), batch_size)
+        out = rollout_batch(self.params, self.gd, keys,
+                            jnp.float32(eps),
+                            sel_mode=self.sel_mode,
+                            plc_mode=self.plc_mode)
+        assigns = np.asarray(out["assignment"])
+        ts = np.asarray(reward_fn(assigns))
+        rs = -ts
+        mean, std = self._baseline()
+        advs = rs - (mean if self._r_count else rs.mean())
+        if self.normalize_adv:
+            advs = advs / (max(std, float(rs.std())) + 1e-9)
+        for r in rs:
+            self._update_reward_stats(float(r))
+        _, grads = _pg_loss_and_grad_batch(
+            self.params, self.gd, keys, out["actions"],
+            jnp.asarray(advs, jnp.float32),
+            jnp.float32(self.entropy_weight),
+            sel_learned=sel_learned, plc_learned=plc_learned)
+        self._apply_grads(grads)
+        self.episode += batch_size
+        best_k = int(ts.argmin())
+        if ts[best_k] < self.best_time:
+            self.best_time = float(ts[best_k])
+            self.best_assignment = assigns[best_k]
+        self.history.append(EpisodeRecord(self.episode, stage,
+                                          float(ts.mean()), self.best_time))
+        return ts
+
     def stage2_sim_batched(self, n_updates: int, sim: WCSimulator | None = None,
                            batch_size: int = 8, log_every: int = 0,
-                           sim_engine: str = "batched"):
+                           sim_engine: str = "batched", **ablation):
         """Population variant of Stage II: sample `batch_size` episodes in
         ONE vmapped rollout, evaluate their rewards against the compiled
         batch simulator (sim_batch.py), and take one batch-averaged
@@ -235,48 +287,150 @@ class DopplerTrainer:
         per-update baseline), and the reward oracle off the Python
         event-loop hot path.  `sim_engine='serial'` keeps the reference
         per-episode `WCSimulator.run` loop (identical results; used by the
-        integration tests)."""
+        integration tests).  Table-3 ablations plumb through **ablation
+        (`sel_learned=` / `plc_learned=`) exactly like `stage2_sim`."""
         sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
                                  noise_sigma=0.05)
         times = []
         for i in range(n_updates):
-            eps = self.eps_sched(self.episode)
-            keys = jax.random.split(self._next_key(), batch_size)
-            out = rollout_batch(self.params, self.gd, keys,
-                                jnp.float32(eps),
-                                sel_mode=self.sel_mode,
-                                plc_mode=self.plc_mode)
-            assigns = np.asarray(out["assignment"])
-            ts = sim.run_paired(
-                assigns,
-                [self.episode * batch_size + k for k in range(batch_size)],
-                engine=sim_engine)
-            rs = -ts
-            mean, std = self._baseline()
-            advs = rs - (mean if self._r_count else rs.mean())
-            if self.normalize_adv:
-                advs = advs / (max(std, float(rs.std())) + 1e-9)
-            for r in rs:
-                self._update_reward_stats(float(r))
-            _, grads = _pg_loss_and_grad_batch(
-                self.params, self.gd, keys, out["actions"],
-                jnp.asarray(advs, jnp.float32),
-                jnp.float32(self.entropy_weight))
-            self._apply_grads(grads)
-            self.episode += batch_size
-            best_k = int(ts.argmin())
-            if ts[best_k] < self.best_time:
-                self.best_time = float(ts[best_k])
-                self.best_assignment = assigns[best_k]
-            self.history.append(EpisodeRecord(self.episode, "sim_batch",
-                                              float(ts.mean()),
-                                              self.best_time))
+            seeds = [self.episode * batch_size + k
+                     for k in range(batch_size)]
+            ts = self._batched_rl_update(
+                lambda a: sim.run_paired(a, seeds, engine=sim_engine),
+                batch_size, "sim_batch", **ablation)
             times.extend(ts.tolist())
             if log_every and (i + 1) % log_every == 0:
                 print(f"[stage2b] upd {i+1}/{n_updates} "
                       f"mean={ts.mean()*1e3:.2f}ms "
                       f"best={self.best_time*1e3:.2f}ms")
         return times
+
+    # ------------------------------------------------------ fused Stage II
+    def stage2_fused(self, n_updates: int, batch_size: int = 8,
+                     updates_per_dispatch: int | None = None,
+                     log_every: int = 0, n_devices: int | None = None,
+                     **ablation):
+        """Device-resident Stage II: rollout, reward oracle, advantage,
+        gradient, and AdamW fused into one jitted step, scanned
+        `updates_per_dispatch` updates per XLA call (train_fused.py).
+
+        Rewards come from the on-device JAX WC oracle (sim_jax.py), i.e.
+        the noise-free 'fifo' twin of the numpy engines; the reference
+        `stage2_sim_batched(sim=WCSimulator(..., noise_sigma=0))` path
+        samples the exact same episodes for the same seeds (bit-identical
+        at eps=0) and is the cross-check in tests/test_train_fused.py.
+        `n_devices > 1` shards the episode batch across XLA devices
+        (data-parallel fused updates, pmean-combined gradients)."""
+        from .sim_jax import SimGraph
+        from .train_fused import (FusedStage2Config, RewardStats,
+                                  build_fused_stage2)
+        if n_devices is None:
+            n_devices = 1
+        U = updates_per_dispatch or min(n_updates, 8)
+        cfg = FusedStage2Config(
+            batch_size=batch_size, updates=U,
+            sel_mode=self.sel_mode, plc_mode=self.plc_mode,
+            sel_learned=ablation.get("sel_learned",
+                                     self.sel_mode == "learned"),
+            plc_learned=ablation.get("plc_learned",
+                                     self.plc_mode == "learned"),
+            normalize_adv=self.normalize_adv,
+            entropy_weight=self.entropy_weight)
+        cache = getattr(self, "_fused_cache", None)
+        if cache is None:
+            cache = self._fused_cache = {}
+        chunk = cache.get((cfg, n_devices))
+        if chunk is None:
+            sg = cache.get("sim_graph")
+            if sg is None:
+                sg = cache["sim_graph"] = SimGraph.build(self.g, self.dev)
+            chunk = cache[(cfg, n_devices)] = build_fused_stage2(
+                cfg, self.gd, sg, self.lr_sched, self.eps_sched,
+                n_devices=n_devices)
+
+        rstats = RewardStats.make(self._r_sum, self._r_sqsum, self._r_count)
+        times = []
+        done = 0
+        while done < n_updates:
+            u = min(U, n_updates - done)
+            if u < U:     # remainder: recompile once for the tail size
+                tail_key = (cfg, n_devices, u)
+                tail = cache.get(tail_key)
+                if tail is None:
+                    tail = cache[tail_key] = build_fused_stage2(
+                        dataclasses.replace(cfg, updates=u), self.gd,
+                        cache["sim_graph"], self.lr_sched, self.eps_sched,
+                        n_devices=n_devices)
+                out = tail(self.params, self.opt_state, rstats,
+                           self.key, jnp.int32(self.episode))
+            else:
+                out = chunk(self.params, self.opt_state, rstats,
+                            self.key, jnp.int32(self.episode))
+            self.params = out["params"]
+            self.opt_state = out["opt_state"]
+            self.key = out["key"]
+            rstats = out["rstats"]
+            ms = np.asarray(out["makespans"])             # (u, K)
+            best_as = np.asarray(out["best_assignments"])  # (u, n)
+            for j in range(ms.shape[0]):
+                ts = ms[j]
+                self.episode += batch_size
+                if ts.min() < self.best_time:
+                    self.best_time = float(ts.min())
+                    self.best_assignment = best_as[j]
+                self.history.append(EpisodeRecord(
+                    self.episode, "sim_fused", float(ts.mean()),
+                    self.best_time))
+                times.extend(ts.tolist())
+            done += ms.shape[0]
+            if log_every:
+                print(f"[stage2f] upd {done}/{n_updates} "
+                      f"mean={ms[-1].mean()*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        self._r_sum = float(rstats.r_sum)
+        self._r_sqsum = float(rstats.r_sqsum)
+        self._r_count = int(rstats.r_count)
+        return times
+
+    # ------------------------------------------------------- fused Stage I
+    def stage1_imitation_fused(self, n_episodes: int, seed: int = 0,
+                               batch_size: int = 1,
+                               log_every: int = 0) -> list[float]:
+        """Stage I with teacher actions precomputed once and imitation
+        updates batched: the CP teacher's `n_episodes` action sequences
+        are generated host-side up front, their (parameter-free) episode
+        dynamics replayed in one vmapped scan, and all updates run as one
+        jitted chunk of step-parallel NLL steps (train_fused.py).  With
+        `batch_size=1` the update sequence matches `stage1_imitation`
+        (same teacher episodes, same per-episode LR schedule) to float
+        tolerance; larger batches average `batch_size` teacher episodes
+        per update at the same total-episode budget."""
+        from .train_fused import build_fused_stage1
+        if n_episodes % batch_size:
+            raise ValueError("n_episodes must be divisible by batch_size")
+        acts = np.stack([
+            critical_path_assignment(self.g, self.dev, seed=seed + i,
+                                     return_actions=True)[1]
+            for i in range(n_episodes)])
+        updates = n_episodes // batch_size
+        replay_dynamics, chunk = build_fused_stage1(
+            self.gd, self.lr_sched, batch_size, updates)
+        masks, x_devs = replay_dynamics(jnp.asarray(acts, jnp.int32))
+        shape = (updates, batch_size)
+        out = chunk(self.params, self.opt_state, self.key,
+                    jnp.int32(self.episode),
+                    masks.reshape(shape + masks.shape[1:]),
+                    x_devs.reshape(shape + x_devs.shape[1:]),
+                    jnp.asarray(acts, jnp.int32).reshape(
+                        shape + acts.shape[1:]))
+        self.params = out["params"]
+        self.opt_state = out["opt_state"]
+        self.key = out["key"]
+        self.episode += n_episodes
+        losses = np.asarray(out["losses"]).tolist()
+        if log_every:
+            print(f"[stage1f] {updates} updates nll={losses[-1]:.4f}")
+        return losses
 
     def stage3_system(self, n_episodes: int,
                       system_exec_time: Callable[[np.ndarray], float],
@@ -348,12 +502,31 @@ class FleetTrainer:
         ts = sim.run_batch(assignment, seeds=seeds, engine=sim_engine)[0]
         return float(np.mean(ts))
 
-    def train(self, n_episodes: int, log_every: int = 0):
+    def train(self, n_episodes: int, log_every: int = 0,
+              batch_size: int = 8):
+        """Train every block policy for `n_episodes` episodes through the
+        batched update path: each update samples a whole population in one
+        vmapped rollout, scores every member across all replicas with one
+        batched-simulator sweep per member, and takes one batch-averaged
+        REINFORCE step (one gradient dispatch per `batch_size` episodes
+        instead of one per episode)."""
         for name, tr in self.trainers.items():
-            for _ in range(n_episodes):
-                tr._rl_episode(
-                    lambda a: self.fleet_exec_time(name, a, tr.episode),
-                    "fleet")
+            sim = self.sims[name]
+
+            def fleet_rewards(assigns: np.ndarray) -> np.ndarray:
+                # row k plays the episode counter the serial path would
+                # have used, so replica seeds line up with fleet_exec_time
+                return np.array([
+                    sim.run_batch(
+                        a, seeds=[(tr.episode + k) * self.n_replicas + r
+                                  for r in range(self.n_replicas)])[0].mean()
+                    for k, a in enumerate(assigns)])
+
+            remaining = n_episodes
+            while remaining > 0:
+                b = min(batch_size, remaining)
+                tr._batched_rl_update(fleet_rewards, b, "fleet")
+                remaining -= b
             if log_every:
                 print(f"[fleet] {name}: best={tr.best_time*1e3:.2f}ms")
 

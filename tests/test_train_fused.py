@@ -1,0 +1,196 @@
+"""Fused Stage-II engine (train_fused.py): parity with the reference path.
+
+The contract under test: ``stage2_fused`` reproduces
+``stage2_sim_batched(engine='serial', noise_sigma=0)`` — the same
+episodes are sampled (bit-identical actions at eps=0 for the same
+seeds), rewards match the serial WC engine to float tolerance, the
+scan-free parallel gradient equals the forced-replay gradient, and the
+trainer bookkeeping (episode counter, running reward stats, best-so-far,
+history) stays in lockstep.  Plus the fused Stage-I imitation path and
+the Table-3 ablation plumbing of `_pg_loss_and_grad_batch`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_diamond
+from repro.core.assign import build_graph_data, rollout_batch
+from repro.core.devices import uniform_box
+from repro.core.policies import init_policies
+from repro.core.simulator import WCSimulator
+from repro.core.train_fused import fused_pg_loss, sample_episodes
+from repro.core.training import (DopplerTrainer, FleetTrainer,
+                                 _pg_loss_and_grad_batch)
+
+
+def make_trainer(graph, dev, seed=0, **kw):
+    kw.setdefault("d_hidden", 16)
+    kw.setdefault("total_episodes", 200)
+    return DopplerTrainer(graph, dev, seed=seed, **kw)
+
+
+# -------------------------------------------------------- exact sampling
+def test_sampler_bit_identical_to_rollout(diamond, dev4):
+    """At eps=0 the recorded sampler replays rollout's RNG stream
+    bit-for-bit (same key chain, same gumbel tables)."""
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=16)
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    rec = sample_episodes(params, gd, keys, jnp.float32(0.0))
+    ref = rollout_batch(params, gd, keys, jnp.float32(0.0))
+    assert (np.asarray(rec["actions"]) == np.asarray(ref["actions"])).all()
+    assert (np.asarray(rec["assignment"])
+            == np.asarray(ref["assignment"])).all()
+
+
+def test_sampler_eps_explores_validly(diamond, dev4):
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=16)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    rec = sample_episodes(params, gd, keys, jnp.float32(0.5))
+    for k in range(4):
+        order = np.asarray(rec["actions"][k, :, 0])
+        assert sorted(order.tolist()) == list(range(diamond.n))
+        a = np.asarray(rec["assignment"][k])
+        assert ((0 <= a) & (a < dev4.n)).all()
+
+
+# ------------------------------------------------------- exact gradients
+def test_fused_gradient_matches_replay(diamond, dev4):
+    """The scan-free loss (linearized SEL + prefix-sum PLC) must equal the
+    forced-replay loss and gradient to float tolerance."""
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=32, d_z=16,
+                           d_y=16)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    rec = sample_episodes(params, gd, keys, jnp.float32(0.0))
+    advs = jnp.asarray([0.5, -0.3, 1.2, -0.8])
+    l_ref, g_ref = _pg_loss_and_grad_batch(
+        params, gd, keys, rec["actions"], advs, jnp.float32(1e-2))
+    l_fus, g_fus = jax.value_and_grad(fused_pg_loss)(
+        params, gd, rec, advs, jnp.float32(1e-2))
+    assert float(l_fus) == pytest.approx(float(l_ref), rel=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_fus)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6)
+
+
+# -------------------------------------------------- fused vs reference
+def _run_pair(graph, dev, n_updates=6, batch_size=4, updates_per_dispatch=3,
+              **kw):
+    sim0 = WCSimulator(graph, dev, choose="fifo", noise_sigma=0.0)
+    ref = make_trainer(graph, dev, eps0=0.0, eps1=0.0, **kw)
+    t_ref = ref.stage2_sim_batched(n_updates, sim0, batch_size=batch_size,
+                                   sim_engine="serial")
+    fus = make_trainer(graph, dev, eps0=0.0, eps1=0.0, **kw)
+    t_fus = fus.stage2_fused(n_updates, batch_size=batch_size,
+                             updates_per_dispatch=updates_per_dispatch)
+    return ref, t_ref, fus, t_fus
+
+
+def test_stage2_fused_matches_reference(diamond, dev4):
+    """Same seeds -> same reward trajectory (float tolerance), same final
+    params, and lockstep trainer bookkeeping."""
+    ref, t_ref, fus, t_fus = _run_pair(diamond, dev4)
+    np.testing.assert_allclose(t_fus, t_ref, rtol=2e-4)
+    assert fus.episode == ref.episode == 24
+    assert fus.best_time == pytest.approx(ref.best_time, rel=2e-4)
+    assert (fus.best_assignment == ref.best_assignment).all()
+    assert fus._r_count == ref._r_count
+    assert fus._r_sum == pytest.approx(ref._r_sum, rel=1e-4)
+    assert [h.episode for h in fus.history] == \
+        [h.episode for h in ref.history]
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(fus.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-3)
+
+
+def test_stage2_fused_remainder_chunks(diamond, dev4):
+    """n_updates not divisible by updates_per_dispatch runs a tail chunk
+    with identical results."""
+    _, t_a, _, t_b = _run_pair(diamond, dev4, n_updates=5,
+                               updates_per_dispatch=2)
+    assert len(t_b) == len(t_a) == 5 * 4
+    np.testing.assert_allclose(t_b, t_a, rtol=2e-4)
+
+
+def test_stage2_fused_ablations_run(diamond, dev4):
+    for kw in ({"sel_mode": "cp"}, {"plc_mode": "etf"}):
+        tr = make_trainer(diamond, dev4, **kw)
+        times = tr.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+        assert len(times) == 8 and np.isfinite(times).all()
+
+
+def test_stage2_fused_learns(diamond, dev4):
+    tr = make_trainer(diamond, dev4, d_hidden=32, total_episodes=400,
+                      lr0=3e-3, lr1=1e-4)
+    times = tr.stage2_fused(40, batch_size=8, updates_per_dispatch=10)
+    assert np.mean(times[-40:]) < np.mean(times[:40])
+    assert tr.best_time <= min(times) + 1e-12
+
+
+# ------------------------------------------------------- fused Stage I
+def test_stage1_fused_matches_loop(diamond, dev4):
+    a = make_trainer(diamond, dev4)
+    losses_loop = a.stage1_imitation(6, seed=3)
+    b = make_trainer(diamond, dev4)
+    losses_fused = b.stage1_imitation_fused(6, seed=3)
+    np.testing.assert_allclose(losses_fused, losses_loop, rtol=1e-3,
+                               atol=1e-5)
+    assert b.episode == a.episode
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=5e-3)
+
+
+def test_stage1_fused_batched(diamond, dev4):
+    tr = make_trainer(diamond, dev4)
+    losses = tr.stage1_imitation_fused(8, seed=0, batch_size=4)
+    assert len(losses) == 2 and tr.episode == 8
+
+
+# ------------------------------------------------- ablation gradient fix
+def test_pg_batch_ablation_gates_gradients(diamond, dev4):
+    """Table-3 modes: the heuristic-replaced policy's parameters must get
+    zero gradient from the batched loss (the PR-2 path silently trained
+    them)."""
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=16)
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    out = rollout_batch(params, gd, keys, jnp.float32(0.1))
+    advs = jnp.ones(3)
+
+    _, g = _pg_loss_and_grad_batch(params, gd, keys, out["actions"], advs,
+                                   jnp.float32(1e-2), sel_learned=False)
+    assert all(float(np.abs(np.asarray(x)).max()) == 0.0
+               for x in jax.tree_util.tree_leaves(g["sel_head"]))
+    _, g = _pg_loss_and_grad_batch(params, gd, keys, out["actions"], advs,
+                                   jnp.float32(1e-2), plc_learned=False)
+    assert all(float(np.abs(np.asarray(x)).max()) == 0.0
+               for x in jax.tree_util.tree_leaves(g["plc_head1"]))
+    _, g = _pg_loss_and_grad_batch(params, gd, keys, out["actions"], advs,
+                                   jnp.float32(1e-2))
+    assert any(float(np.abs(np.asarray(x)).max()) > 0.0
+               for x in jax.tree_util.tree_leaves(g["sel_head"]))
+
+
+def test_stage2_sim_batched_accepts_ablation(diamond, dev4):
+    tr = make_trainer(diamond, dev4, sel_mode="cp")
+    sim = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.0)
+    times = tr.stage2_sim_batched(2, sim, batch_size=3)
+    assert len(times) == 6
+
+
+# ------------------------------------------------------- fleet batching
+def test_fleet_train_batched_matches_episode_budget(diamond, dev4):
+    ft = FleetTrainer({"blk": diamond}, dev4, n_replicas=3, seed=0,
+                      d_hidden=16, total_episodes=60)
+    ft.train(10, batch_size=4)
+    tr = ft.trainers["blk"]
+    assert tr.episode == 10
+    assert [h.stage for h in tr.history] == ["fleet"] * 3  # 4+4+2
+    assert tr.best_assignment is not None
