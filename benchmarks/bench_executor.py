@@ -1,0 +1,125 @@
+"""Stage-III real-system throughput: the batched engine path vs the
+serial per-episode protocol, plus sim-to-real calibration residuals.
+
+Rows (-> BENCH_exec.json via `python -m benchmarks.run exec`):
+
+    exec_stage3_serial,  us_per_episode, eps_per_sec
+    exec_stage3_batched, us_per_episode, eps_per_sec + speedup + batch
+    exec_measure_batched, us_per_measurement (plan-cached execute_batch)
+    calib_residual_device / calib_residual_link / calib_residual_overall
+    calib_recover_overhead (ground-truth recovery, sim-measured)
+
+Protocol: both Stage-III paths train the same policy against the same
+plan-compiled `WCExecutor` (tiny payloads — `flops_scale=1e-4` — so the
+numbers measure executor/trainer machinery, not matmul throughput).
+The serial path is the pre-batching per-episode protocol: one
+`exec_time` measurement (warmup + timed run) and one gradient per
+episode.  The batched path takes ONE batch-averaged gradient per
+`BATCH` interleaved measurements (`stage3_system_batched`).  The
+acceptance bar is >= 3x episodes/sec; a miss prints a warning, not a
+hard failure (wall-clock on shared CI boxes is noisy).
+
+Calibration rows: `calibrate_fleet` against the real executor records
+the fit residuals (on a 1-CPU host the link fit degenerates — inter-
+"device" copies are nearly free — which shows up as huge fitted
+bandwidths, not as a failure), and a simulator-ground-truth run records
+worst-case recovery error of a perturbed fleet's overhead vector.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import budget, emit
+
+from repro.core.calibrate import (calibrate_fleet, executor_measure,
+                                  simulator_measure)
+from repro.core.devices import scale_fleet, uniform_box
+from repro.core.engine import ExecutorRewardEngine
+from repro.core.executor import WCExecutor
+from repro.core.training import DopplerTrainer
+from repro.graphs.workloads import synthetic_layered
+
+BATCH = 32
+N_DEV = 4
+EXEC_KW = dict(flops_scale=1e-4, bytes_scale=1e-3, n_virtual=N_DEV)
+
+
+def bench_stage3() -> float:
+    g = synthetic_layered(4, 6)
+    dev = uniform_box(N_DEV)
+    n_serial = budget(10, 40)           # serial episodes timed
+    n_upd = budget(2, 8)                # batched updates timed
+
+    # serial per-episode protocol (one warmup + one measurement per
+    # episode, one gradient per episode)
+    ex_s = WCExecutor(g, **EXEC_KW)
+    tr_s = DopplerTrainer(g, dev, seed=0, total_episodes=10_000)
+    tr_s.stage3_system(1, lambda a: ex_s.exec_time(a))      # compile/warm
+    t0 = time.perf_counter()
+    tr_s.stage3_system(n_serial, lambda a: ex_s.exec_time(a))
+    dt_s = (time.perf_counter() - t0) / n_serial
+
+    # batched engine path: one gradient per BATCH interleaved measurements
+    ex_b = WCExecutor(g, **EXEC_KW)
+    eng = ExecutorRewardEngine(ex_b, repeats=1)
+    tr_b = DopplerTrainer(g, dev, seed=0, total_episodes=10_000)
+    tr_b.stage3_system_batched(1, eng, batch_size=BATCH)    # compile/warm
+    t0 = time.perf_counter()
+    tr_b.stage3_system_batched(n_upd, eng, batch_size=BATCH)
+    dt_b = (time.perf_counter() - t0) / (n_upd * BATCH)
+
+    speedup = dt_s / dt_b
+    emit("exec_stage3_serial", dt_s * 1e6,
+         f"eps_per_sec={1.0 / dt_s:.2f} n={g.n}")
+    emit("exec_stage3_batched", dt_b * 1e6,
+         f"eps_per_sec={1.0 / dt_b:.2f} speedup={speedup:.2f}x "
+         f"batch={BATCH}")
+
+    # raw measurement throughput of the plan-compiled batch path
+    A = np.stack([tr_b.greedy_assignment() for _ in range(8)])
+    ex_b.execute_batch(A, repeats=1)                        # warm plans
+    t0 = time.perf_counter()
+    reps = budget(2, 6)
+    ex_b.execute_batch(A, repeats=reps)
+    dt_m = (time.perf_counter() - t0) / (len(A) * reps)
+    emit("exec_measure_batched", dt_m * 1e6,
+         f"meas_per_sec={1.0 / dt_m:.2f}")
+    return speedup
+
+
+def bench_calibration() -> None:
+    base = uniform_box(N_DEV)
+    # against the real executor: record fit residuals
+    cal = calibrate_fleet(
+        base, executor_measure(N_DEV, repeats=budget(3, 7),
+                               flops_scale=EXEC_KW["flops_scale"],
+                               bytes_scale=EXEC_KW["bytes_scale"]),
+        chain_len=budget(8, 16))
+    for fam in ("device", "link", "overall"):
+        if fam in cal.residuals:
+            emit(f"calib_residual_{fam}", cal.residuals[fam] * 1e6,
+                 f"rel={cal.residuals[fam]:.4f} n_meas={cal.n_measurements}")
+
+    # ground-truth recovery (simulator-measured perturbed fleet): the
+    # quantity the tier-1 tests gate at <= 10%
+    truth = scale_fleet(base, speed=[1.0, 0.6, 1.5, 0.9], name="truth")
+    truth.exec_overhead = np.array([4e-6, 9e-6, 5.5e-6, 7e-6])
+    rec = calibrate_fleet(base, simulator_measure(truth))
+    rel = np.abs(rec.exec_overhead - truth.exec_overhead_vec) \
+        / truth.exec_overhead_vec
+    emit("calib_recover_overhead", rel.max() * 1e6,
+         f"max_rel_err={rel.max():.2e}")
+
+
+def main() -> None:
+    speedup = bench_stage3()
+    bench_calibration()
+    if speedup < 3.0:
+        print(f"# WARNING: batched Stage-III speedup {speedup:.2f}x below "
+              f"the 3x acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

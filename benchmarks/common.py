@@ -63,8 +63,40 @@ def timed(fn, *args, n: int = 3, warmup: int = 1):
     return out, dt
 
 
-def eval_mean_std(sim, assignment, n_runs: int = 10, seed0: int = 1000):
-    """Paper protocol: mean/std over n_runs seeds — one batched sweep."""
-    ts = sim.run_batch(assignment,
-                       seeds=[seed0 + i for i in range(n_runs)])[0]
+def eval_mean_std(source, assignment, n_runs: int = 10, seed0: int = 1000):
+    """Paper protocol: mean/std over n_runs repeated executions.
+
+    `source` is any reward source (`WCSimulator`, `WCExecutor`, engine,
+    callable) — routed through the RewardEngine adapter, so simulators
+    keep the historical `seed0 + i` seeds (one batched sweep) and
+    batch-capable real systems measure all repeats in one call."""
+    from repro.core.engine import as_engine
+    ts = as_engine(source).evaluate_repeats(assignment, n_runs, seed0=seed0)
     return float(np.mean(ts)), float(np.std(ts))
+
+
+def parse_system(argv=None) -> str:
+    """`--system={sim,executor}` for the Stage-III benchmarks: `sim`
+    (default, CI-fast) scores Stage III against the noisy digital twin;
+    `executor` runs it against the real plan-compiled WCExecutor."""
+    import argparse
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--system", default=os.environ.get("REPRO_SYSTEM", "sim"),
+                    choices=["sim", "executor"])
+    args, _ = ap.parse_known_args(argv)
+    return args.system
+
+
+def stage3_source(system: str, g, dev, *, noise: float = 0.08,
+                  repeats: int = 2, flops_scale: float = 1e-4,
+                  bytes_scale: float = 1e-3):
+    """The Stage-III "real system" for the paper tables: the noisy WC
+    twin (`sim`) or an `ExecutorRewardEngine` over the real executor."""
+    from repro.core.simulator import WCSimulator
+    if system == "executor":
+        from repro.core.engine import ExecutorRewardEngine
+        from repro.core.executor import WCExecutor
+        ex = WCExecutor(g, flops_scale=flops_scale,
+                        bytes_scale=bytes_scale, n_virtual=dev.n)
+        return ExecutorRewardEngine(ex, repeats=repeats)
+    return WCSimulator(g, dev, choose="fifo", noise_sigma=noise)

@@ -1,9 +1,12 @@
-"""Paper Fig. 4: training-stage combinations (I/II/III) on LLAMA-LAYER."""
+"""Paper Fig. 4: training-stage combinations (I/II/III) on LLAMA-LAYER.
+`--system executor` scores Stage III on the real executor."""
 from __future__ import annotations
 
-from common import budget, emit, eval_mean_std, trainer_kwargs
+from common import (budget, emit, eval_mean_std, parse_system,
+                    stage3_source, trainer_kwargs)
 
 from repro.core.devices import p100_box
+from repro.core.engine import as_engine
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer
 from repro.graphs.workloads import llama_layer
@@ -15,7 +18,7 @@ def main():
     g = llama_layer()
     dev = p100_box(4)
     sim = WCSimulator(g, dev, noise_sigma=0.03)
-    real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+    real = as_engine(stage3_source(parse_system(), g, dev))
     n1 = budget(15, 200)
     n2 = budget(150, 4000)
     n3 = budget(60, 2000)
@@ -26,7 +29,7 @@ def main():
             tr.stage1_imitation(n1)
         if "II" in combo.replace("III", ""):
             tr.stage2_sim(n2, sim)
-        tr.stage3_system(n3, lambda a: real.exec_time(a, seed=tr.episode))
+        tr.stage3_system(n3, lambda a: real.exec_time(a, tr.episode))
         mean, std = eval_mean_std(real, tr.best_assignment)
         emit(f"fig4/llama_layer/{combo}", mean * 1e6,
              f"ms={mean*1e3:.1f}+-{std*1e3:.1f}")

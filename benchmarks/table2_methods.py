@@ -1,14 +1,17 @@
 """Paper Table 2: execution time of assignments from every method on the
 four workload graphs (4-device P100 box, WC simulator as the engine;
-DOPPLER-SYS additionally runs Stage III against the noisy 'real-system'
-twin, mirroring the sim->real split of the paper)."""
+DOPPLER-SYS additionally runs Stage III against the "real system" —
+by default the noisy twin mirroring the paper's sim->real split, or the
+actual plan-compiled WCExecutor with `--system executor`)."""
 from __future__ import annotations
 
 import numpy as np
 
-from common import PAPER_TABLE2, budget, emit, eval_mean_std, trainer_kwargs
+from common import (PAPER_TABLE2, budget, emit, eval_mean_std, parse_system,
+                    stage3_source, trainer_kwargs)
 
 from repro.core.devices import p100_box
+from repro.core.engine import as_engine
 from repro.core.enumopt import enumerative_assignment
 from repro.core.gdp import GDPTrainer
 from repro.core.heuristics import best_critical_path
@@ -18,13 +21,14 @@ from repro.core.training import DopplerTrainer
 from repro.graphs.workloads import WORKLOADS
 
 
-def run_graph(name: str, seed: int = 0) -> dict:
+def run_graph(name: str, seed: int = 0, system: str = "sim") -> dict:
     g = WORKLOADS[name]()
     dev = p100_box(4)
     sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.03)
-    # the "real system" twin: different scheduling strategy + more noise,
-    # so Stage III sees a distribution shift exactly like sim->real
-    real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+    # the "real system": the noisier twin (distribution shift exactly
+    # like sim->real) or the actual executor; both ride the engine
+    # protocol, so the Stage-III and evaluation paths are identical
+    real = as_engine(stage3_source(system, g, dev))
     out = {}
 
     cp_a, cp_t = best_critical_path(g, dev,
@@ -52,14 +56,15 @@ def run_graph(name: str, seed: int = 0) -> dict:
     out["doppler_sim"] = eval_mean_std(real, dop.best_assignment)
 
     dop.stage3_system(budget(60, 1000),
-                      lambda a: real.exec_time(a, seed=dop.episode))
+                      lambda a: real.exec_time(a, dop.episode))
     out["doppler_sys"] = eval_mean_std(real, dop.best_assignment)
     return out
 
 
 def main():
+    system = parse_system()
     for name in WORKLOADS:
-        res = run_graph(name)
+        res = run_graph(name, system=system)
         paper = PAPER_TABLE2[name]
         best_baseline = min(res["crit_path"][0], res["placeto"][0],
                             res["gdp"][0])

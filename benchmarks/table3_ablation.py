@@ -1,11 +1,13 @@
 """Paper Table 3: SEL/PLC ablation — DOPPLER-SYS vs DOPPLER-SEL (learned
 select + ETF place) vs DOPPLER-PLC (critical-path select + learned
-place)."""
+place).  `--system executor` scores Stage III on the real executor."""
 from __future__ import annotations
 
-from common import budget, emit, eval_mean_std, trainer_kwargs
+from common import (budget, emit, eval_mean_std, parse_system,
+                    stage3_source, trainer_kwargs)
 
 from repro.core.devices import p100_box
+from repro.core.engine import as_engine
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer
 from repro.graphs.workloads import WORKLOADS
@@ -15,19 +17,20 @@ VARIANTS = {"sys": {}, "sel": {"plc_mode": "etf"}, "plc": {"sel_mode": "cp"}}
 
 def main():
     dev = p100_box(4)
+    system = parse_system()
     n_rl = budget(200, 4000)
     graphs = list(WORKLOADS) if budget(0, 1) else ["chainmm", "ffnn"]
     for name in graphs:
         g = WORKLOADS[name]()
         sim = WCSimulator(g, dev, noise_sigma=0.03)
-        real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+        real = as_engine(stage3_source(system, g, dev))
         for variant, kw in VARIANTS.items():
             tr = DopplerTrainer(g, dev, seed=0, total_episodes=n_rl,
                                 **trainer_kwargs(), **kw)
             tr.stage1_imitation(budget(60, 200))
             tr.stage2_sim(n_rl, sim)
             tr.stage3_system(budget(40, 500),
-                             lambda a: real.exec_time(a, seed=tr.episode))
+                             lambda a: real.exec_time(a, tr.episode))
             mean, std = eval_mean_std(real, tr.best_assignment)
             emit(f"table3/{name}/doppler_{variant}", mean * 1e6,
                  f"ms={mean*1e3:.1f}+-{std*1e3:.1f}")

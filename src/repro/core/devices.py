@@ -91,6 +91,11 @@ class DeviceModel:
         np.fill_diagonal(t, 0.0)
         return t
 
+    def replace(self, **kw) -> "DeviceModel":
+        """Copy with fields replaced — how calibration (core/calibrate.py)
+        and fleet perturbations derive fitted/what-if fleets."""
+        return dataclasses.replace(self, **kw)
+
     def memory_ok(self, bytes_per_device: np.ndarray) -> bool:
         """Does a per-device residency profile fit?  Always True when the
         fleet has no modeled capacity."""

@@ -1,10 +1,19 @@
 """DOPPLER policy checkpointing: save/restore the dual-policy parameters
-plus trainer state (reward statistics, episode counter) so Stage III can
-resume in production and policies can be shipped between hosts
-(the Table-4 transfer protocol needs exactly this)."""
+plus trainer state (reward statistics, episode counter, PRNG key) so
+Stage III can resume in production and policies can be shipped between
+hosts (the Table-4 transfer protocol needs exactly this).
+
+The saved state is *resume-exact*: params, optimizer, episode counter
+(which drives the lr/eps schedules), running reward stats, best-so-far,
+and the trainer's PRNG key — a reloaded trainer continues with the same
+trajectories, params, and greedy assignment the uninterrupted run would
+have produced, on both the batched and fused Stage-II paths
+(tests/test_engine.py)."""
 from __future__ import annotations
 
 import pathlib
+
+import numpy as np
 
 from ..train.checkpoint import restore_checkpoint, save_checkpoint
 
@@ -15,6 +24,7 @@ def save_policy(ckpt_dir: str | pathlib.Path, trainer) -> pathlib.Path:
         "r_sum": trainer._r_sum,
         "r_sqsum": trainer._r_sqsum,
         "r_count": trainer._r_count,
+        "key": np.asarray(trainer.key).tolist(),
         "best_time": (float(trainer.best_time)
                       if trainer.best_time != float("inf") else None),
         "best_assignment": (trainer.best_assignment.tolist()
@@ -30,7 +40,6 @@ def load_policy(ckpt_dir: str | pathlib.Path, trainer, step: int | None = None):
     """Restore params/opt/reward-stats into an existing trainer (built for
     the target graph/devices — transfer is just building the trainer on a
     different graph first)."""
-    import numpy as np
     from ..train.checkpoint import latest_step
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
@@ -40,6 +49,10 @@ def load_policy(ckpt_dir: str | pathlib.Path, trainer, step: int | None = None):
     trainer.params = params
     trainer.opt_state = opt_state
     trainer.episode = int(extra["episode"])
+    if extra.get("key") is not None:       # pre-engine checkpoints lack it
+        import jax.numpy as jnp
+        trainer.key = jnp.asarray(
+            np.asarray(extra["key"], dtype=np.uint32))
     trainer._r_sum = float(extra["r_sum"])
     trainer._r_sqsum = float(extra["r_sqsum"])
     trainer._r_count = int(extra["r_count"])

@@ -28,6 +28,7 @@ import numpy as np
 from ..train.optim import AdamState, adamw_init, adamw_update, linear_schedule
 from .assign import GraphData, build_graph_data, rollout, rollout_batch
 from .devices import DeviceModel
+from .engine import RewardEngine, SimRewardEngine, as_engine
 from .graph import DataflowGraph
 from .heuristics import critical_path_assignment
 from .policies import init_policies
@@ -195,6 +196,42 @@ class DopplerTrainer:
         return losses
 
     # ------------------------------------------------------ Stage II/III
+    def train_rl(self, system, n_updates: int, batch_size: int = 8,
+                 stage: str | None = None, serial: bool = False,
+                 log_every: int = 0, **ablation) -> list[float]:
+        """The engine-driven REINFORCE core shared by every RL stage.
+
+        ``system`` is anything :func:`engine.as_engine` accepts — a
+        :class:`RewardEngine`, a ``WCSimulator``, a ``WCExecutor``, a
+        ``JaxWCEngine``, or a plain callable.  Each update samples
+        ``batch_size`` episodes in one vmapped rollout, scores them with
+        ONE ``engine.exec_times`` call, and takes one batch-averaged
+        gradient step; ``serial=True`` (requires ``batch_size == 1``)
+        instead replays the per-episode loop of the legacy
+        ``stage2_sim`` / ``stage3_system`` paths bit-for-bit (single-
+        episode advantage against the running baseline, per-episode
+        gradient)."""
+        eng = as_engine(system)
+        if serial and batch_size != 1:
+            raise ValueError("serial mode is the batch_size=1 loop")
+        stage = stage or eng.name
+        times: list[float] = []
+        for i in range(n_updates):
+            if serial:
+                t = self._rl_episode(
+                    lambda a: eng.exec_time(a, self.episode),
+                    stage, **ablation)
+                times.append(t)
+            else:
+                ts = self._batched_rl_update(eng, batch_size, stage,
+                                             **ablation)
+                times.extend(ts.tolist())
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[{stage}] upd {i+1}/{n_updates} "
+                      f"t={times[-1]*1e3:.2f}ms "
+                      f"best={self.best_time*1e3:.2f}ms")
+        return times
+
     def _rl_episode(self, exec_time_fn: Callable[[np.ndarray], float],
                     stage: str, sel_learned=None, plc_learned=None):
         if sel_learned is None:
@@ -223,24 +260,33 @@ class DopplerTrainer:
 
     def stage2_sim(self, n_episodes: int, sim: WCSimulator | None = None,
                    log_every: int = 0, **ablation) -> list[float]:
+        """Per-episode Stage II (the paper's serial protocol), routed
+        through the engine adapter: at K=1 the engine's ``episode*K + k``
+        seeds reduce to ``seed=episode`` — the legacy reward call — so
+        same-seed trajectories are unchanged."""
         sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
                                  noise_sigma=0.05)
         times = []
+        eng = as_engine(sim)
         for i in range(n_episodes):
-            t = self._rl_episode(lambda a: sim.exec_time(a, seed=self.episode),
-                                 "sim", **ablation)
+            t = self._rl_episode(
+                lambda a: eng.exec_time(a, self.episode),
+                "sim", **ablation)
             times.append(t)
             if log_every and (i + 1) % log_every == 0:
                 print(f"[stage2] ep {i+1}/{n_episodes} t={t*1e3:.2f}ms "
                       f"best={self.best_time*1e3:.2f}ms")
         return times
 
-    def _batched_rl_update(self, reward_fn, batch_size: int, stage: str,
+    def _batched_rl_update(self, reward, batch_size: int, stage: str,
                            sel_learned=None, plc_learned=None) -> np.ndarray:
         """One population REINFORCE update: sample `batch_size` episodes in
-        a single vmapped rollout, score them with `reward_fn(assignments)
-        -> (K,) exec times`, and take one batch-averaged gradient step.
-        Shared by `stage2_sim_batched` and `FleetTrainer.train`."""
+        a single vmapped rollout, score them with ONE reward query —
+        ``reward`` is a :class:`RewardEngine` (queried as
+        ``exec_times(assignments, episode)``) or a legacy callable
+        ``reward_fn(assignments) -> (K,)`` — and take one batch-averaged
+        gradient step.  Shared by every engine-backed stage and
+        `FleetTrainer.train`."""
         if sel_learned is None:
             sel_learned = self.sel_mode == "learned"
         if plc_learned is None:
@@ -252,7 +298,10 @@ class DopplerTrainer:
                             sel_mode=self.sel_mode,
                             plc_mode=self.plc_mode)
         assigns = np.asarray(out["assignment"])
-        ts = np.asarray(reward_fn(assigns))
+        if isinstance(reward, RewardEngine):
+            ts = np.asarray(reward.exec_times(assigns, self.episode))
+        else:
+            ts = np.asarray(reward(assigns))
         rs = -ts
         mean, std = self._baseline()
         advs = rs - (mean if self._r_count else rs.mean())
@@ -288,16 +337,21 @@ class DopplerTrainer:
         event-loop hot path.  `sim_engine='serial'` keeps the reference
         per-episode `WCSimulator.run` loop (identical results; used by the
         integration tests).  Table-3 ablations plumb through **ablation
-        (`sel_learned=` / `plc_learned=`) exactly like `stage2_sim`."""
+        (`sel_learned=` / `plc_learned=`) exactly like `stage2_sim`.
+
+        Since the engine refactor this is a thin wrapper over
+        :meth:`train_rl` with a :class:`SimRewardEngine`; the engine's
+        ``episode*K + k`` seed convention is exactly the seed list this
+        method always built, so same-seed trajectories, params, and
+        bookkeeping are bit-identical to the pre-engine path
+        (tests/test_engine.py)."""
         sim = sim or WCSimulator(self.g, self.dev, choose="fifo",
                                  noise_sigma=0.05)
+        eng = SimRewardEngine(sim, sim_engine=sim_engine)
         times = []
         for i in range(n_updates):
-            seeds = [self.episode * batch_size + k
-                     for k in range(batch_size)]
-            ts = self._batched_rl_update(
-                lambda a: sim.run_paired(a, seeds, engine=sim_engine),
-                batch_size, "sim_batch", **ablation)
+            ts = self._batched_rl_update(eng, batch_size, "sim_batch",
+                                         **ablation)
             times.extend(ts.tolist())
             if log_every and (i + 1) % log_every == 0:
                 print(f"[stage2b] upd {i+1}/{n_updates} "
@@ -436,7 +490,12 @@ class DopplerTrainer:
                       system_exec_time: Callable[[np.ndarray], float],
                       log_every: int = 0, **ablation) -> list[float]:
         """Online refinement against the real WC executor: the reward is the
-        observed wall-clock of serving real requests ("for free", §5)."""
+        observed wall-clock of serving real requests ("for free", §5).
+
+        The legacy serial protocol: one episode, one real measurement,
+        one gradient.  For the amortized path — one batch-averaged
+        gradient per K plan-compiled executor measurements — use
+        :meth:`stage3_system_batched`."""
         times = []
         for i in range(n_episodes):
             t = self._rl_episode(system_exec_time, "sys", **ablation)
@@ -446,19 +505,54 @@ class DopplerTrainer:
                       f"best={self.best_time*1e3:.2f}ms")
         return times
 
+    def stage3_system_batched(self, n_updates: int, system,
+                              batch_size: int = 8, repeats: int = 1,
+                              log_every: int = 0, **ablation) -> list[float]:
+        """Batched Stage III: each update samples `batch_size` candidate
+        assignments in one vmapped rollout, measures all of them through
+        the system's batch path (for a ``WCExecutor``: one
+        ``execute_batch`` call — plans cached, warmup amortized,
+        `repeats` interleaved for common-random-numbers denoising), and
+        takes ONE batch-averaged REINFORCE step per K measurements —
+        instead of the serial loop's one gradient per episode.
+
+        ``repeats`` is an executor-measurement concept: it applies when
+        ``system`` is a ``WCExecutor`` (or an ``ExecutorRewardEngine``,
+        whose executor is re-wrapped at the requested repeat count);
+        passing ``repeats != 1`` with any other system is an error
+        rather than a silent no-op."""
+        from .engine import ExecutorRewardEngine
+        from .executor import WCExecutor
+        if isinstance(system, WCExecutor):
+            system = ExecutorRewardEngine(system, repeats=repeats)
+        elif repeats != 1:
+            if isinstance(system, ExecutorRewardEngine):
+                system = ExecutorRewardEngine(system.executor,
+                                              repeats=repeats,
+                                              reduce=system.reduce)
+            else:
+                raise ValueError(
+                    "repeats is only meaningful for executor-backed "
+                    "systems; seeded/deterministic engines replay instead")
+        return self.train_rl(system, n_updates, batch_size=batch_size,
+                             stage="sys_batch", log_every=log_every,
+                             **ablation)
+
     # -------------------------------------------------------- evaluation
     def evaluate(self, sim_or_fn, n_runs: int = 10,
                  assignment: np.ndarray | None = None):
         """Paper protocol: mean +/- std of `n_runs` executions of the best
-        found assignment."""
+        found assignment.
+
+        Any reward source goes through the engine adapter: simulators
+        keep the historical seeds ``1000..1000+n_runs-1``, batch-capable
+        engines (executor, batched callables) evaluate all repeats in
+        one call, and noise-free deterministic engines dedup the repeats
+        into a single episode."""
         a = assignment if assignment is not None else self.best_assignment
         if a is None:
             a = self.greedy_assignment()
-        if isinstance(sim_or_fn, WCSimulator):
-            ts = sim_or_fn.run_batch(a, seeds=[1000 + i
-                                               for i in range(n_runs)])[0]
-        else:
-            ts = [sim_or_fn(a) for i in range(n_runs)]
+        ts = as_engine(sim_or_fn).evaluate_repeats(a, n_runs)
         return float(np.mean(ts)), float(np.std(ts)), a
 
 

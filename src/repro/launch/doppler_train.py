@@ -1,13 +1,31 @@
-"""DOPPLER policy-training CLI — the paper's pipeline as a launcher.
+"""DOPPLER policy-training CLI — the paper's full three-stage pipeline.
 
   PYTHONPATH=src python -m repro.launch.doppler_train \
       --graph ffnn --devices p100x4 \
-      --stage1 200 --stage2 2000 --stage3 500 \
-      --ckpt-dir runs/ffnn --trace runs/ffnn/schedule.json
+      --stage1 100 --stage2 100 --stage3 20 \
+      --engine batched --system sim --ckpt-dir runs/ffnn
 
-Stages map to the paper's §5; --resume restores policy + reward stats
-(Stage III production resumption).  --trace writes a Perfetto schedule of
-the best assignment (Appendix-A-style utilization analysis).
+  # Stage II on the fused engine, Stage III batched against the REAL
+  # plan-compiled executor, with the Stage-II digital twin calibrated
+  # from executor probe measurements first (sim-to-real closure):
+  PYTHONPATH=src python -m repro.launch.doppler_train \
+      --graph ffnn --devices p100x4 --stage1 60 --stage2 60 --stage3 10 \
+      --engine fused --system executor --calibrate --stage3-batch 8
+
+Stages map to the paper's §5.  Stage-II reward engines (`--engine`):
+'serial' is the per-episode reference loop, 'batched' the compiled
+population path, 'jax' the device-resident oracle through the generic
+engine-driven core, 'fused' the fully jitted train step.  Stage III
+(`--system`) rides the same RewardEngine protocol: 'sim' scores against
+a noisier digital twin, 'executor' against observed wall-clock of the
+real WC executor (`--stage3-batch K` takes one batch-averaged gradient
+per K measurements; 1 keeps the serial paper protocol).  `--calibrate`
+fits the twin's DeviceModel (per-device overheads/rates + link
+bandwidths) to executor probe measurements before Stage II so the
+simulator predicts the hardware Stage III will measure.  A checkpoint is
+saved after EVERY stage (`--ckpt-dir`), and `--resume` restores
+params + optimizer + reward stats + PRNG key for exact continuation.
+`--trace` writes a Perfetto schedule of the best assignment.
 """
 from __future__ import annotations
 
@@ -15,8 +33,12 @@ import argparse
 
 import numpy as np
 
+from ..core.calibrate import calibrate_fleet, executor_measure
 from ..core.devices import get_device_model
+from ..core.engine import ExecutorRewardEngine, JaxOracleEngine, \
+    SimRewardEngine
 from ..core.enumopt import enumerative_assignment
+from ..core.executor import WCExecutor
 from ..core.heuristics import best_critical_path
 from ..core.policy_io import load_policy, save_policy
 from ..core.simulator import WCSimulator
@@ -25,14 +47,37 @@ from ..core.training import DopplerTrainer
 from ..graphs.workloads import get_workload
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="DOPPLER three-stage training pipeline")
     ap.add_argument("--graph", required=True,
-                    help="chainmm|ffnn|llama_block|llama_layer")
+                    help="chainmm|ffnn|llama_block|llama_layer|model:<arch>")
     ap.add_argument("--devices", default="p100x4")
-    ap.add_argument("--stage1", type=int, default=100)
-    ap.add_argument("--stage2", type=int, default=1000)
-    ap.add_argument("--stage3", type=int, default=200)
+    ap.add_argument("--stage1", type=int, default=100,
+                    help="Stage-I imitation episodes")
+    ap.add_argument("--stage2", type=int, default=125,
+                    help="Stage-II updates (episodes = updates x batch)")
+    ap.add_argument("--stage2-batch", type=int, default=8)
+    ap.add_argument("--engine", default="batched",
+                    choices=["serial", "batched", "jax", "fused"],
+                    help="Stage-II reward engine")
+    ap.add_argument("--stage3", type=int, default=25,
+                    help="Stage-III updates (episodes = updates x batch)")
+    ap.add_argument("--stage3-batch", type=int, default=8,
+                    help="real measurements per Stage-III gradient "
+                         "(1 = the serial paper protocol)")
+    ap.add_argument("--system", default="sim", choices=["sim", "executor"],
+                    help="Stage-III reward source")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="interleaved executor repeats per measurement")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the Stage-II twin's DeviceModel from "
+                         "executor probe measurements first")
+    ap.add_argument("--noise", type=float, default=0.03,
+                    help="Stage-II sim noise sigma")
+    ap.add_argument("--flops-scale", type=float, default=1e-4,
+                    help="executor payload scale (CPU-host friendly)")
+    ap.add_argument("--bytes-scale", type=float, default=1e-3)
     ap.add_argument("--lr0", type=float, default=3e-3)
     ap.add_argument("--lr1", type=float, default=1e-5)
     ap.add_argument("--seed", type=int, default=0)
@@ -43,46 +88,111 @@ def main():
                     choices=["learned", "cp"])
     ap.add_argument("--plc-mode", default="learned",
                     choices=["learned", "etf"])
-    args = ap.parse_args()
+    return ap
+
+
+def _save_stage(args, trainer, stage: str):
+    if args.ckpt_dir:
+        path = save_policy(args.ckpt_dir, trainer)
+        print(f"[{stage}] checkpoint saved: {path}")
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     g = get_workload(args.graph)
     dev = get_device_model(args.devices)
-    total = args.stage1 + args.stage2 + args.stage3
-    trainer = DopplerTrainer(g, dev, seed=args.seed, total_episodes=total,
+
+    # ------------------------------------------------- real system + twin
+    executor = None
+    if args.system == "executor":
+        executor = WCExecutor(g, flops_scale=args.flops_scale,
+                              bytes_scale=args.bytes_scale,
+                              n_virtual=dev.n)
+    dev_twin = dev
+    if args.calibrate:
+        cal = calibrate_fleet(
+            dev, executor_measure(dev.n, repeats=max(args.repeats, 3),
+                                  flops_scale=args.flops_scale,
+                                  bytes_scale=args.bytes_scale))
+        dev_twin = cal.fleet
+        print(f"calibrated {dev.name} from {cal.n_measurements} executor "
+              f"measurements: overhead={cal.exec_overhead} "
+              f"rel_residual={cal.rel_residual:.3f}")
+
+    total = (args.stage1 + args.stage2 * args.stage2_batch
+             + args.stage3 * args.stage3_batch)
+    trainer = DopplerTrainer(g, dev_twin, seed=args.seed,
+                             total_episodes=max(total, 1),
                              lr0=args.lr0, lr1=args.lr1,
                              sel_mode=args.sel_mode, plc_mode=args.plc_mode)
     if args.resume and args.ckpt_dir:
         load_policy(args.ckpt_dir, trainer)
         print(f"resumed at episode {trainer.episode}")
 
-    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.03)
-    real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+    sim = WCSimulator(g, dev_twin, choose="fifo", noise_sigma=args.noise)
+    if args.system == "executor":
+        stage3_engine = ExecutorRewardEngine(executor, repeats=args.repeats)
+        real_eval = stage3_engine
+    else:
+        real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
+        stage3_engine = SimRewardEngine(real)
+        real_eval = real
 
-    cp_a, cp_t = best_critical_path(g, dev,
+    cp_a, cp_t = best_critical_path(g, dev_twin,
                                     lambda a: sim.exec_time(a, seed=0),
                                     n_trials=30)
     print(f"{args.graph} on {args.devices}: CP={cp_t*1e3:.2f}ms "
-          f"EnumOpt={sim.exec_time(enumerative_assignment(g, dev))*1e3:.2f}ms")
+          f"EnumOpt={sim.exec_time(enumerative_assignment(g, dev_twin))*1e3:.2f}ms")
 
+    # ------------------------------------------------------------ Stage I
     if args.stage1:
-        nll = trainer.stage1_imitation(args.stage1)
+        if args.engine == "fused":
+            nll = trainer.stage1_imitation_fused(args.stage1)
+        else:
+            nll = trainer.stage1_imitation(args.stage1)
         print(f"stage I : imitation NLL {nll[0]:.3f} -> {nll[-1]:.3f}")
-    if args.stage2:
-        trainer.stage2_sim(args.stage2, sim,
-                           log_every=max(args.stage2 // 5, 1))
-    if args.stage3:
-        trainer.stage3_system(
-            args.stage3, lambda a: real.exec_time(a, seed=trainer.episode),
-            log_every=max(args.stage3 // 5, 1))
+        _save_stage(args, trainer, "stage1")
 
-    mean, std, a = trainer.evaluate(real)
+    # ----------------------------------------------------------- Stage II
+    if args.stage2:
+        log = max(args.stage2 // 5, 1)
+        if args.engine == "serial":
+            trainer.stage2_sim(args.stage2 * args.stage2_batch, sim,
+                               log_every=log * args.stage2_batch)
+        elif args.engine == "batched":
+            trainer.stage2_sim_batched(args.stage2, sim,
+                                       batch_size=args.stage2_batch,
+                                       log_every=log)
+        elif args.engine == "jax":
+            trainer.train_rl(JaxOracleEngine(g, dev_twin), args.stage2,
+                             batch_size=args.stage2_batch, stage="sim_jax",
+                             log_every=log)
+        else:                                                # fused
+            trainer.stage2_fused(args.stage2, batch_size=args.stage2_batch,
+                                 log_every=log)
+        _save_stage(args, trainer, "stage2")
+
+    # ---------------------------------------------------------- Stage III
+    if args.stage3:
+        log = max(args.stage3 // 5, 1)
+        if args.stage3_batch == 1:
+            trainer.stage3_system(
+                args.stage3,
+                lambda a: stage3_engine.exec_time(a, trainer.episode),
+                log_every=log)
+        else:
+            trainer.stage3_system_batched(args.stage3, stage3_engine,
+                                          batch_size=args.stage3_batch,
+                                          log_every=log)
+        _save_stage(args, trainer, "stage3")
+
+    # --------------------------------------------------------------- eval
+    mean, std, a = trainer.evaluate(real_eval)
     print(f"DOPPLER best: {mean*1e3:.2f} +- {std*1e3:.2f} ms "
           f"({100*(1 - mean/cp_t):+.1f}% vs CP)")
-    res = real.run(a, record=True)
+    res = sim.run(a, record=True)
     print(utilization_ascii(res))
-    if args.ckpt_dir:
-        path = save_policy(args.ckpt_dir, trainer)
-        print(f"policy saved: {path}")
     if args.trace:
         write_chrome_trace(args.trace, res, g)
         print(f"perfetto trace: {args.trace}")

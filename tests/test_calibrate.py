@@ -1,0 +1,99 @@
+"""Sim-to-real calibration (core/calibrate.py).
+
+The acceptance contract: calibration recovers a `scale_fleet`-perturbed
+fleet's per-device overhead vector (and rates / asymmetric link
+bandwidths) to <= 10% relative error from measured probe makespans —
+near-exactly when the measurement oracle is noise-free, and still within
+tolerance under measurement noise with median-of-repeats.
+"""
+import numpy as np
+import pytest
+
+from repro.core.calibrate import (CalibrationResult, calibrate_fleet,
+                                  executor_measure, probe_chain,
+                                  simulator_measure)
+from repro.core.devices import scale_fleet, uniform_box
+from repro.core.simulator import WCSimulator
+
+
+def perturbed_truth(nd: int = 4):
+    base = uniform_box(nd)
+    truth = scale_fleet(base, speed=[1.0, 0.6, 1.5, 0.9][:nd],
+                        name="truth")
+    truth.exec_overhead = np.array([4e-6, 9e-6, 5.5e-6, 7e-6][:nd])
+    bw = truth.link_bw.copy()
+    bw[0, 1], bw[1, 0] = 20e9, 35e9          # asymmetric pair
+    bw[2, 3] = 10e9
+    truth.link_bw = bw
+    return base, truth
+
+
+def rel_err(fit, true):
+    return np.abs(np.asarray(fit) - np.asarray(true)) / np.asarray(true)
+
+
+def test_probe_chain_structure():
+    g = probe_chain(6, flops=1e6, nbytes=512.0)
+    assert g.n == 7 and g.is_input(0)
+    assert all(len(g.preds[v]) == 1 for v in range(1, 7))
+
+
+def test_recovers_perturbed_fleet_noise_free():
+    base, truth = perturbed_truth()
+    cal = calibrate_fleet(base, simulator_measure(truth))
+    assert isinstance(cal, CalibrationResult)
+    assert rel_err(cal.exec_overhead, truth.exec_overhead_vec).max() <= 0.10
+    assert rel_err(cal.flops_per_sec, truth.flops_per_sec).max() <= 0.10
+    off = ~np.eye(base.n, dtype=bool)
+    assert rel_err(cal.link_bw[off], truth.link_bw[off]).max() <= 0.10
+    # noise-free linear probes fit essentially exactly
+    assert cal.rel_residual < 1e-6
+    assert cal.fleet.heterogeneous
+    assert cal.fleet.n == base.n
+
+
+def test_recovers_overhead_under_measurement_noise():
+    base, truth = perturbed_truth()
+    cal = calibrate_fleet(
+        base, simulator_measure(truth, noise_sigma=0.01, repeats=9))
+    assert rel_err(cal.exec_overhead, truth.exec_overhead_vec).max() <= 0.10
+    assert rel_err(cal.flops_per_sec, truth.flops_per_sec).max() <= 0.10
+
+
+def test_calibrated_twin_predicts_probe_makespans():
+    """Closed loop: a WC simulator over the fitted fleet reproduces the
+    measured makespans of held-out probe assignments."""
+    base, truth = perturbed_truth()
+    cal = calibrate_fleet(base, simulator_measure(truth))
+    g = probe_chain(10, flops=5e7, nbytes=2e6, name="heldout")
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, base.n, size=(8, g.n))
+    meas = WCSimulator(g, truth, noise_sigma=0.0).run_batch(A)[:, 0]
+    pred = WCSimulator(g, cal.fleet, noise_sigma=0.0).run_batch(A)[:, 0]
+    assert rel_err(pred, meas).max() <= 0.05
+
+
+def test_skip_link_fit_keeps_base_links():
+    base, truth = perturbed_truth()
+    cal = calibrate_fleet(base, simulator_measure(truth), fit_links=False)
+    assert (cal.link_bw == base.link_bw).all()
+    assert "link" not in cal.residuals
+
+
+def test_chain_len_validation():
+    base, truth = perturbed_truth()
+    with pytest.raises(ValueError):
+        calibrate_fleet(base, simulator_measure(truth), chain_len=7)
+
+
+@pytest.mark.slow
+def test_executor_measure_runs_end_to_end():
+    """The real-executor oracle produces a usable (if noisy) fit on a
+    CPU host — positive overheads, finite rates, sane residual keys."""
+    base = uniform_box(2)
+    cal = calibrate_fleet(base, executor_measure(
+        2, repeats=3, flops_scale=1e-6, bytes_scale=1e-6), chain_len=8)
+    assert (cal.exec_overhead >= 0).all()
+    assert np.isfinite(cal.flops_per_sec).all()
+    assert {"device", "link", "overall"} <= set(cal.residuals)
+    assert cal.n_measurements > 0

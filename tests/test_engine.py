@@ -1,0 +1,320 @@
+"""Reward-engine protocol (core/engine.py) + plan-compiled executor
+(core/executor.py) + engine-driven trainer paths.
+
+The load-bearing contracts:
+
+* `stage2_sim_batched` through the engine adapter is BIT-IDENTICAL to
+  the pre-refactor inline loop (same seeds, same rewards, same params,
+  same bookkeeping) — the engine refactor is a pure plumbing change.
+* `stage2_sim` (serial) routed through the engine reproduces the legacy
+  `sim.exec_time(a, seed=episode)` loop bit-for-bit.
+* `stage3_system_batched` takes exactly ONE reward query and ONE
+  gradient per `batch_size` episodes.
+* `evaluate` routes every source through the adapter: batch-capable
+  engines evaluate in one call, deterministic engines dedup repeats.
+* `WCExecutor.execute_batch` plans once per unique assignment, derives
+  the same transfer set as `sim_batch.compile_assignment`, and returns
+  a (K, repeats) wall-clock matrix.
+* checkpoint save/resume mid-Stage-II is exact on the batched and fused
+  paths (params, trajectories, greedy assignment).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_diamond
+from repro.core.devices import uniform_box
+from repro.core.engine import (CallableEngine, ExecutorRewardEngine,
+                               JaxOracleEngine, RewardEngine,
+                               SimRewardEngine, as_engine)
+from repro.core.executor import WCExecutor
+from repro.core.policy_io import load_policy, save_policy
+from repro.core.sim_batch import CompiledGraph, compile_assignment
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+
+
+def make_trainer(graph, dev, seed=0, **kw):
+    kw.setdefault("d_hidden", 16)
+    kw.setdefault("total_episodes", 200)
+    return DopplerTrainer(graph, dev, seed=seed, **kw)
+
+
+def params_equal(p1, p2) -> bool:
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    return all((np.asarray(a) == np.asarray(b)).all()
+               for a, b in zip(l1, l2))
+
+
+# ---------------------------------------------------------------- adapters
+def test_as_engine_coercion(diamond, dev4):
+    sim = WCSimulator(diamond, dev4, noise_sigma=0.05)
+    assert isinstance(as_engine(sim), SimRewardEngine)
+    eng = SimRewardEngine(sim)
+    assert as_engine(eng) is eng
+    assert isinstance(as_engine(lambda a: 1.0), CallableEngine)
+    ex = WCExecutor(diamond, flops_scale=1e-6, bytes_scale=1e-4, n_virtual=4)
+    assert isinstance(as_engine(ex), ExecutorRewardEngine)
+    with pytest.raises(TypeError):
+        as_engine(object())
+
+
+def test_sim_engine_seed_convention(diamond, dev4):
+    """episode*K + k — the seeds stage2_sim_batched always used; at K=1
+    this degrades to seed=episode (the serial stage2_sim convention)."""
+    sim = WCSimulator(diamond, dev4, noise_sigma=0.1)
+    eng = SimRewardEngine(sim)
+    A = np.stack([np.zeros(diamond.n, int), np.arange(diamond.n) % 4,
+                  np.ones(diamond.n, int)])
+    ts = eng.exec_times(A, episode=7)
+    ref = sim.run_paired(A, [7 * 3 + k for k in range(3)])
+    assert (ts == ref).all()
+    t1 = eng.exec_times(A[1][None, :], episode=5)[0]
+    assert t1 == sim.exec_time(A[1], seed=5)
+
+
+def test_sim_engine_determinism_flag(diamond, dev4):
+    assert SimRewardEngine(
+        WCSimulator(diamond, dev4, noise_sigma=0.0)).deterministic
+    assert not SimRewardEngine(
+        WCSimulator(diamond, dev4, noise_sigma=0.1)).deterministic
+    assert not SimRewardEngine(
+        WCSimulator(diamond, dev4, choose="random")).deterministic
+
+
+def test_jax_oracle_engine(diamond, dev4):
+    eng = JaxOracleEngine(diamond, dev4)
+    sim = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.0)
+    a = np.arange(diamond.n) % 4
+    ts = eng.exec_times(a[None, :])
+    assert ts[0] == pytest.approx(sim.exec_time(a), rel=1e-5)
+    assert eng.deterministic and eng.batched
+    # deterministic => evaluate dedups into one episode
+    reps = eng.evaluate_repeats(a, 5)
+    assert reps.shape == (5,) and np.ptp(reps) == 0.0
+
+
+# ------------------------------------------------- engine-refactor parity
+def test_stage2_sim_batched_bit_identical_to_inline_loop(diamond, dev4):
+    """The acceptance contract: trajectories/params/bookkeeping are
+    bit-identical to the pre-engine inline reward loop."""
+    sim_a = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.05)
+    sim_b = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.05)
+    tr_a = make_trainer(diamond, dev4, seed=0)
+    t_a = tr_a.stage2_sim_batched(3, sim_a, batch_size=4)
+    tr_b = make_trainer(diamond, dev4, seed=0)
+    t_b = []
+    for _ in range(3):                      # the pre-refactor code, inlined
+        seeds = [tr_b.episode * 4 + k for k in range(4)]
+        ts = tr_b._batched_rl_update(
+            lambda a: sim_b.run_paired(a, seeds), 4, "sim_batch")
+        t_b.extend(ts.tolist())
+    assert t_a == t_b
+    assert params_equal(tr_a.params, tr_b.params)
+    assert (tr_a._r_sum, tr_a._r_sqsum, tr_a._r_count) == \
+        (tr_b._r_sum, tr_b._r_sqsum, tr_b._r_count)
+    assert tr_a.best_time == tr_b.best_time
+    assert (tr_a.best_assignment == tr_b.best_assignment).all()
+    assert [(h.episode, h.stage, h.exec_time, h.best_so_far)
+            for h in tr_a.history] == \
+        [(h.episode, h.stage, h.exec_time, h.best_so_far)
+         for h in tr_b.history]
+
+
+def test_stage2_sim_serial_bit_identical_to_legacy(diamond, dev4):
+    tr_a = make_trainer(diamond, dev4, seed=1)
+    t_a = tr_a.stage2_sim(5, WCSimulator(diamond, dev4, choose="fifo",
+                                         noise_sigma=0.05))
+    tr_b = make_trainer(diamond, dev4, seed=1)
+    sim = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.05)
+    t_b = [tr_b._rl_episode(
+        lambda a: sim.exec_time(a, seed=tr_b.episode), "sim")
+        for _ in range(5)]
+    assert t_a == t_b
+    assert params_equal(tr_a.params, tr_b.params)
+
+
+def test_stage3_batched_one_gradient_per_k_measurements(diamond, dev4):
+    """One reward query + one history record (= one gradient) per
+    batch_size episodes."""
+    calls = []
+
+    def batch_reward(A):
+        calls.append(np.asarray(A).shape)
+        return np.linalg.norm(np.asarray(A, float), axis=1) + 1.0
+
+    tr = make_trainer(diamond, dev4, seed=2)
+    tr.stage3_system_batched(3, CallableEngine(batch_reward, batched=True),
+                             batch_size=4)
+    assert calls == [(4, diamond.n)] * 3
+    assert tr.episode == 12
+    assert [h.stage for h in tr.history] == ["sys_batch"] * 3
+
+
+def test_stage3_serial_back_compat(diamond, dev4):
+    """The legacy callable interface still runs one episode per call."""
+    seen = []
+
+    def system(a):
+        seen.append(np.asarray(a).shape)
+        return 1.0 + 0.01 * len(seen)
+
+    tr = make_trainer(diamond, dev4)
+    tr.stage3_system(4, system)
+    assert seen == [(diamond.n,)] * 4
+    assert tr.episode == 4
+
+
+def test_train_rl_serial_requires_batch_one(diamond, dev4):
+    tr = make_trainer(diamond, dev4)
+    with pytest.raises(ValueError):
+        tr.train_rl(lambda a: 1.0, 1, batch_size=2, serial=True)
+
+
+# ----------------------------------------------------------------- evaluate
+def test_evaluate_sim_path_unchanged(diamond, dev4):
+    sim = WCSimulator(diamond, dev4, noise_sigma=0.1)
+    tr = make_trainer(diamond, dev4)
+    a = np.arange(diamond.n) % 4
+    mean, std, out_a = tr.evaluate(sim, n_runs=6, assignment=a)
+    ts = sim.run_batch(a, seeds=[1000 + i for i in range(6)])[0]
+    assert mean == float(np.mean(ts)) and std == float(np.std(ts))
+    assert (out_a == a).all()
+
+
+def test_evaluate_batched_engine_single_call(diamond, dev4):
+    calls = []
+
+    def batch_fn(A):
+        calls.append(np.asarray(A).shape)
+        return np.full(np.asarray(A).shape[0], 2.5)
+
+    tr = make_trainer(diamond, dev4)
+    a = np.zeros(diamond.n, int)
+    mean, std, _ = tr.evaluate(CallableEngine(batch_fn, batched=True),
+                               n_runs=7, assignment=a)
+    assert calls == [(7, diamond.n)]          # one shot, not 7 calls
+    assert mean == 2.5 and std == 0.0
+
+
+def test_evaluate_deterministic_engine_dedups(diamond, dev4):
+    calls = []
+
+    def det_fn(a):
+        calls.append(1)
+        return 3.0
+
+    tr = make_trainer(diamond, dev4)
+    a = np.zeros(diamond.n, int)
+    mean, std, _ = tr.evaluate(CallableEngine(det_fn, deterministic=True),
+                               n_runs=9, assignment=a)
+    assert len(calls) == 1                    # deduped to a single episode
+    assert mean == 3.0 and std == 0.0
+
+
+def test_evaluate_plain_callable_still_loops(diamond, dev4):
+    calls = []
+
+    def fn(a):
+        calls.append(1)
+        return float(len(calls))
+
+    tr = make_trainer(diamond, dev4)
+    mean, _, _ = tr.evaluate(fn, n_runs=4,
+                             assignment=np.zeros(diamond.n, int))
+    assert len(calls) == 4 and mean == 2.5
+
+
+# ------------------------------------------------------- executor plans
+EXEC_KW = dict(flops_scale=1e-6, bytes_scale=1e-4, n_virtual=4)
+
+
+def test_executor_plan_cache_and_transfer_parity(diamond, dev4):
+    ex = WCExecutor(diamond, **EXEC_KW)
+    a = np.arange(diamond.n) % 4
+    p1 = ex.compile_plan(a)
+    assert ex.compile_plan(a.copy()) is p1            # cached
+    # transfer set parity with the compiled simulator's task derivation
+    cg = CompiledGraph.build(diamond, dev4)
+    assert p1.n_transfers == len(compile_assignment(cg, a).xfer_src)
+    assert p1.n_transfers == sum(len(s[2]) for s in p1.steps)
+    # all-on-one-device => no transfers
+    assert ex.compile_plan(np.zeros(diamond.n, int)).n_transfers == 0
+
+
+def test_executor_execute_batch_shape_and_dedup(diamond):
+    ex = WCExecutor(diamond, **EXEC_KW)
+    A = np.stack([np.zeros(diamond.n, int), np.arange(diamond.n) % 4,
+                  np.zeros(diamond.n, int)])
+    out = ex.execute_batch(A, repeats=2)
+    assert out.shape == (3, 2) and (out > 0).all()
+    assert len(ex._plan_cache) == 2                   # rows 0/2 share a plan
+    assert (out[0] != out[2]).any()   # ...but are measured independently
+    t = ex.exec_time(A[1], n_warmup=0, n_runs=2)
+    assert t > 0
+    assert ex.execute(A[1]) > 0
+    assert ex.execute(A[1], measure=False) == 0.0
+
+
+def test_executor_reward_engine(diamond):
+    ex = WCExecutor(diamond, **EXEC_KW)
+    eng = ExecutorRewardEngine(ex, repeats=2)
+    A = np.stack([np.zeros(diamond.n, int), np.arange(diamond.n) % 4])
+    ts = eng.exec_times(A)
+    assert ts.shape == (2,) and (ts > 0).all()
+    reps = eng.evaluate_repeats(A[0], 3)
+    assert reps.shape == (3,) and (reps > 0).all()
+    assert eng.batched and eng.measured and not eng.deterministic
+    with pytest.raises(ValueError):
+        ExecutorRewardEngine(ex, reduce="max")
+
+
+# ------------------------------------------------------ checkpoint resume
+def test_checkpoint_resume_batched_path(tmp_path, diamond, dev4):
+    """Save mid-Stage-II, reload into a FRESH trainer: subsequent
+    trajectories, params, and greedy assignment are identical."""
+    def sim():
+        return WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.05)
+
+    tr = make_trainer(diamond, dev4, seed=3)
+    tr.stage2_sim_batched(2, sim(), batch_size=4)
+    save_policy(tmp_path, tr)
+    cont_ref = tr.stage2_sim_batched(2, sim(), batch_size=4)
+
+    tr2 = make_trainer(diamond, dev4, seed=999)       # different init
+    load_policy(tmp_path, tr2)
+    assert tr2.episode == 8
+    cont = tr2.stage2_sim_batched(2, sim(), batch_size=4)
+    assert cont == cont_ref
+    assert params_equal(tr.params, tr2.params)
+    assert params_equal(tr.opt_state.mu, tr2.opt_state.mu)
+    assert (tr.greedy_assignment() == tr2.greedy_assignment()).all()
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_fused_path(tmp_path, diamond, dev4):
+    tr = make_trainer(diamond, dev4, seed=4)
+    tr.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+    save_policy(tmp_path, tr)
+    cont_ref = tr.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+
+    tr2 = make_trainer(diamond, dev4, seed=123)
+    load_policy(tmp_path, tr2)
+    cont = tr2.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+    assert cont == cont_ref
+    assert params_equal(tr.params, tr2.params)
+    assert (tr.greedy_assignment() == tr2.greedy_assignment()).all()
+
+
+def test_checkpoint_restores_key_and_stats(tmp_path, diamond, dev4):
+    tr = make_trainer(diamond, dev4, seed=5)
+    tr.stage2_sim_batched(1, WCSimulator(diamond, dev4, noise_sigma=0.05),
+                          batch_size=4)
+    save_policy(tmp_path, tr)
+    tr2 = make_trainer(diamond, dev4, seed=77)
+    load_policy(tmp_path, tr2)
+    assert (np.asarray(tr.key) == np.asarray(tr2.key)).all()
+    assert (tr2._r_sum, tr2._r_sqsum, tr2._r_count) == \
+        (tr._r_sum, tr._r_sqsum, tr._r_count)
+    assert tr2.best_time == tr.best_time
