@@ -1,60 +1,114 @@
-"""Paper Fig. 6: inference time + policy-update time vs graph size, for
-DOPPLER (MP once/episode), PLACETO-style (MP every step), and GDP."""
+"""Scalability, reworked (was: paper Fig. 6 inference/update timing):
+flat vs hierarchical coarsen->place->refine across graph scale.
+
+Two questions, answered as BENCH_hier.json rows (tag `hier`):
+
+1. Stage-II training throughput vs graph size.  The flat SEL/PLC rollout
+   is O(steps x vertices), so episodes/sec collapses with scale; the
+   hierarchical path rolls out on the segment graph and stays flat-cost.
+   Synthetic layered graphs sweep 512 -> 16k vertices (the 8k/16k points
+   run under REPRO_FULL=1); `model:olmo_1b:full` (~6.8k-vertex full
+   training-step graph) is measured on BOTH paths — the acceptance bar
+   is hierarchical >= 5x flat on the same graph.
+2. Placement quality at full-model scale.  For every HETERO_FLEETS
+   entry, a short hierarchical pipeline (Stage-I imitation + Stage-II
+   REINFORCE on the segment graph, then expand + warm-started bounded
+   refinement on the flat graph) must reach a makespan <= the flat
+   CRITICAL-PATH heuristic (best of 3 seeds).  The warm start makes the
+   inequality structural (refinement is monotone); the recorded margins
+   show it is not vacuous.
+"""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from common import emit
+from common import FULL, budget, emit
 
-from repro.core.assign import build_graph_data, rollout
-from repro.core.devices import p100_box
-from repro.core.gdp import GDPTrainer
-from repro.core.placeto import PlacetoTrainer
+from repro.core.devices import HETERO_FLEETS, get_device_model, p100_box
+from repro.core.heuristics import critical_path_assignment
+from repro.core.hierarchy import HierarchyConfig
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer
-from repro.graphs.workloads import synthetic_layered
+from repro.graphs.workloads import get_workload, synthetic_layered
 
-SIZES = (50, 100, 200, 400, 800)
+SIZES = (512, 1024, 2048, 4096, 8192, 16384) if FULL else \
+        (512, 1024, 2048, 4096)
+FLAT_MAX = 1024                 # flat updates measured up to here (+ olmo)
+BATCH = 4
+HIER = HierarchyConfig(n_segments=64, refine_rounds=3, refine_top_k=24)
+
+
+def seconds_per_update(trainer, sim, n_measure: int = 2) -> float:
+    trainer.stage2_sim_batched(1, sim, batch_size=BATCH)       # compile
+    t0 = time.perf_counter()
+    trainer.stage2_sim_batched(n_measure, sim, batch_size=BATCH)
+    return (time.perf_counter() - t0) / n_measure
+
+
+def measure_graph(tag: str, g, dev, flat: bool) -> dict:
+    out = {}
+    sim0 = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+    hier_tr = DopplerTrainer(g, dev, seed=0, d_hidden=32,
+                             total_episodes=100, hierarchy=HIER)
+    dt = seconds_per_update(
+        hier_tr, WCSimulator(hier_tr.g, dev, choose="fifo", noise_sigma=0.0))
+    out["hier"] = dt
+    emit(f"hier/{tag}/hier_update", dt * 1e6,
+         f"eps_per_sec={BATCH/dt:.2f} n={g.n} segs={hier_tr.g.n}")
+    if flat:
+        flat_tr = DopplerTrainer(g, dev, seed=0, d_hidden=32,
+                                 total_episodes=100)
+        n_meas = 2 if g.n <= 2 * FLAT_MAX else 1
+        dt = seconds_per_update(flat_tr, sim0, n_measure=n_meas)
+        out["flat"] = dt
+        emit(f"hier/{tag}/flat_update", dt * 1e6,
+             f"eps_per_sec={BATCH/dt:.2f} n={g.n}")
+    return out
+
+
+def makespan_contest(g, fleet: str) -> None:
+    """Hierarchical final makespan vs the flat CP heuristic on `fleet`."""
+    dev = get_device_model(fleet)
+    flat_eval = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+    cp_t = min(flat_eval.batch_engine.exec_time(
+        critical_path_assignment(g, dev, seed=s)) for s in range(3))
+    tr = DopplerTrainer(g, dev, seed=0, d_hidden=32, total_episodes=300,
+                        lr0=3e-3, lr1=1e-5, hierarchy=HIER)
+    tr.stage1_imitation(budget(10, 40))
+    tr.stage2_sim_batched(budget(8, 40), batch_size=8)
+    _, t = tr.place(engine=flat_eval, include_flat_cp=True)
+    ok = int(t <= cp_t)
+    emit(f"hier/olmo_full/{fleet}/makespan", t * 1e6,
+         f"hier_ms={t*1e3:.3f} cp_ms={cp_t*1e3:.3f} ok={ok} "
+         f"margin={100*(1 - t/max(cp_t, 1e-30)):.1f}")
+    if not ok:
+        print(f"# WARNING: hierarchical makespan lost to flat CP on "
+              f"{fleet}: {t*1e3:.2f}ms > {cp_t*1e3:.2f}ms")
 
 
 def main():
     dev = p100_box(4)
+    # ------------------------------------------------ synthetic size sweep
     for n_target in SIZES:
-        g = synthetic_layered(n_layers=max(2, n_target // 8 - 1), width=8)
-        sim = WCSimulator(g, dev)
-        n = g.n
+        g = synthetic_layered(n_layers=max(2, n_target // 16), width=16)
+        # gate on the sweep target, not g.n (the graph carries extra input
+        # vertices), so the 1024 point keeps its flat baseline
+        measure_graph(f"synth{n_target}", g, dev, flat=n_target <= FLAT_MAX)
 
-        dop = DopplerTrainer(g, dev, seed=0, total_episodes=100)
-        a, _ = dop.sample_assignment()            # compile
-        t0 = time.perf_counter()
-        for _ in range(5):
-            dop.sample_assignment()
-        t_inf = (time.perf_counter() - t0) / 5
-        t0 = time.perf_counter()
-        for _ in range(3):
-            dop._rl_episode(lambda x: sim.exec_time(x), "bench")
-        t_upd = (time.perf_counter() - t0) / 3
-        emit(f"fig6/doppler/n{n}/inference", t_inf * 1e6, f"nodes={n}")
-        emit(f"fig6/doppler/n{n}/update", t_upd * 1e6, f"nodes={n}")
+    # ------------------------------------- full model: the acceptance bar
+    g = get_workload("model:olmo_1b:full", seq=64)
+    res = measure_graph("olmo_full", g, dev, flat=True)
+    speedup = res["flat"] / res["hier"]
+    emit("hier/olmo_full/speedup", res["flat"] * 1e6,
+         f"speedup={speedup:.1f}x n={g.n} bar=5x")
+    if speedup < 5:
+        print(f"# WARNING: hierarchical Stage-II speedup {speedup:.1f}x "
+              f"below the 5x bar")
 
-        gdp = GDPTrainer(g, dev, seed=0, total_episodes=100)
-        gdp.train(1, sim)                          # compile
-        t0 = time.perf_counter()
-        gdp.train(3, sim)
-        emit(f"fig6/gdp/n{n}/update",
-             (time.perf_counter() - t0) / 3 * 1e6, f"nodes={n}")
-
-        if n <= 200:                               # per-step MP is O(n) GNNs
-            pl = PlacetoTrainer(g, dev, seed=0, total_episodes=100)
-            pl.train(1, sim)
-            t0 = time.perf_counter()
-            pl.train(2, sim)
-            emit(f"fig6/placeto_mp_per_step/n{n}/update",
-                 (time.perf_counter() - t0) / 2 * 1e6, f"nodes={n}")
+    for fleet in HETERO_FLEETS:
+        makespan_contest(g, fleet)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,8 @@ MODULES = [
     ("table3", "table3_ablation", {}),
     ("table4", "table4_transfer", {}),
     ("fig4", "fig4_stages", {}),
-    ("fig6", "fig6_scalability", {}),
+    # reworked Fig. 6: flat-vs-hierarchical scalability sweep (was "fig6")
+    ("hier", "fig6_scalability", {}),
     ("table6", "table6_mp_ablation", {}),
     ("table9", "table9_hardware", {}),
     ("g1", "g1_sim_fidelity", {}),
@@ -41,7 +42,7 @@ MODULES = [
     ("zoo", "zoo_sweep", {}),
 ]
 
-ROW_RE = re.compile(r"^([A-Za-z0-9_.:\-]+),(-?[0-9.eE+\-]+),(.*)$")
+ROW_RE = re.compile(r"^([A-Za-z0-9_.:/\-]+),(-?[0-9.eE+\-]+),(.*)$")
 
 
 def parse_derived(text: str) -> dict:

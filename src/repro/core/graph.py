@@ -61,6 +61,11 @@ class DataflowGraph:
         self.name = name
         self.vertices: list[Vertex] = []
         self.edges: list[tuple[int, int]] = []
+        # Designated output vertices (e.g. the jaxpr outvars) — what a
+        # downstream consumer of this graph's result reads.  Optional:
+        # builders that know their outputs populate it; structural tools
+        # (graphs/partition.py tiling) require it to chain repetitions.
+        self.outputs: list[int] = []
         self._frozen = False
 
     # ------------------------------------------------------------- build

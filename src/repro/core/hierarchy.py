@@ -1,0 +1,279 @@
+"""Hierarchical placement: coarsen -> place -> refine (core half).
+
+``graphs/partition.py`` turns a full-model :class:`DataflowGraph` into a
+segment-level graph; this module owns what happens *after* the existing
+SEL/PLC dual policy places those segments:
+
+* :class:`HierarchicalPolicy` — expansion of a segment assignment to the
+  flat graph plus a bounded intra-segment refinement pass: the highest-
+  traffic boundary vertices (non-input vertices whose edges cross devices
+  under the current assignment) are re-placed one move at a time, every
+  candidate move scored through the :class:`~repro.core.engine
+  .RewardEngine` protocol in batched ``exec_times`` calls (the compiled
+  simulator, the JAX oracle, or the real executor — refinement does not
+  care which).  Refinement is monotone w.r.t. the scoring engine: the
+  returned assignment never scores worse than the input.
+* :class:`ExpandingEngine` — a ``RewardEngine`` adapter that scores
+  *segment-level* assignments by expanding them and delegating to a
+  flat-graph engine.  This is how hierarchical Stage II/III can train
+  against flat-graph (or real-system) rewards while the policy still
+  rolls out on the small segment graph.
+
+``DopplerTrainer(..., hierarchy=HierarchyConfig(...))`` wires this in:
+the trainer's policy, stages, and checkpoints run unchanged on the
+segment graph, and ``trainer.place()`` produces the refined flat
+assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs.partition import Partition
+from .engine import RewardEngine, as_engine
+from .graph import DataflowGraph
+
+__all__ = ["HierarchyConfig", "RefineState", "HierarchicalPolicy",
+           "ExpandingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Knobs of the coarsen -> place -> refine pipeline.
+
+    n_segments:     target compute-segment count for ``coarsen``.
+    refine_rounds:  bounded refinement rounds per :meth:`refine` call.
+    refine_top_k:   boundary vertices re-placed per round.
+    cap_factor:     coarsening imbalance cap (see ``coarsen``).
+    """
+    n_segments: int = 64
+    refine_rounds: int = 2
+    refine_top_k: int = 16
+    cap_factor: float = 2.0
+
+
+@dataclasses.dataclass
+class RefineState:
+    """Resumable refinement bookkeeping (checkpointed by policy_io)."""
+    assignment: np.ndarray | None = None    # best refined flat assignment
+    exec_time: float = float("inf")         # its engine score
+    rounds_done: int = 0
+    moves_applied: int = 0
+
+
+def boundary_scores(g: DataflowGraph, assignment: np.ndarray) -> np.ndarray:
+    """(n,) cross-device traffic attributable to each vertex.
+
+    A vertex scores the bytes of its in/out edges whose endpoints sit on
+    different devices (non-input producers only — input results are
+    resident everywhere in the WC engines, so moving them is free and
+    pointless).  Refinement re-places the top scorers."""
+    a = np.asarray(assignment)
+    scores = np.zeros(g.n)
+    E = g.edge_array()
+    if not len(E):
+        return scores
+    src, dst = E[:, 0], E[:, 1]
+    inputs = g.input_mask()
+    w = g.out_bytes_array()[src] * (a[src] != a[dst]) * ~inputs[src]
+    np.add.at(scores, src, w)
+    np.add.at(scores, dst, w)
+    scores[inputs] = 0.0
+    return scores
+
+
+class HierarchicalPolicy:
+    """Expansion + bounded boundary refinement over a :class:`Partition`."""
+
+    def __init__(self, partition: Partition, config: HierarchyConfig,
+                 devices):
+        self.partition = partition
+        self.config = config
+        self.devices = devices
+        self.n_devices = int(devices.n) if hasattr(devices, "n") \
+            else int(devices)
+        self.refine_state = RefineState()
+        self._exec_cost = None          # lazy (n, nd) flat exec-cost table
+
+    @property
+    def exec_cost(self) -> np.ndarray | None:
+        """(n, nd) per-device exec seconds of flat vertices (0 for inputs),
+        used to rank load-balance refinement moves; None when the policy
+        was built with a bare device count."""
+        if self._exec_cost is None and hasattr(self.devices, "flops_per_sec"):
+            g = self.partition.flat
+            flops = g.flops_array()
+            cost = (self.devices.exec_overhead_vec[None, :]
+                    + flops[:, None] / self.devices.flops_per_sec[None, :])
+            cost[g.input_mask()] = 0.0
+            self._exec_cost = cost
+        return self._exec_cost
+
+    # ------------------------------------------------------------ expand
+    def expand(self, seg_assignment) -> np.ndarray:
+        """Segment assignment(s) -> flat assignment(s) (batch-friendly)."""
+        return self.partition.expand(seg_assignment)
+
+    # ------------------------------------------------------------ refine
+    def refine(self, assignment, engine, episode: int = 0,
+               rounds: int | None = None,
+               top_k: int | None = None) -> tuple[np.ndarray, float]:
+        """Bounded intra-segment refinement of a flat assignment.
+
+        Per round, two single-move families are proposed — communication
+        moves (top boundary-traffic vertices onto their neighbors'
+        devices) and balance moves (heaviest vertices of the most-loaded
+        device onto the least-loaded ones) — and ALL candidates are
+        scored in one batched ``exec_times`` call; the best single move
+        is then compared against the greedy combination of every
+        individually-improving move (one more 2-row call).  Monotone:
+        the result never scores worse than the input under ``engine``.
+        """
+        eng = as_engine(engine)
+        g = self.partition.flat
+        cfg = self.config
+        rounds = cfg.refine_rounds if rounds is None else rounds
+        top_k = cfg.refine_top_k if top_k is None else top_k
+        nd = self.n_devices
+        a = np.asarray(assignment, dtype=np.int64).copy()
+        t = float(eng.exec_times(a[None, :], episode)[0])
+        rounds_done = moves_applied = 0
+
+        for r in range(rounds):
+            cands, moves = [], []
+            seen: set[tuple[int, int]] = set()
+
+            def propose(v: int, d: int):
+                if d != int(a[v]) and (v, d) not in seen:
+                    seen.add((v, d))
+                    b = a.copy()
+                    b[v] = d
+                    cands.append(b)
+                    moves.append((v, d))
+
+            # (a) communication moves: top boundary-traffic vertices onto
+            # the devices their neighbors already occupy
+            scores = boundary_scores(g, a)
+            top = np.argsort(-scores, kind="stable")[:top_k]
+            top = top[scores[top] > 0]
+            for v in top.tolist():
+                near = ({int(a[p]) for p in g.preds[v] if not g.is_input(p)}
+                        | {int(a[s]) for s in g.succs[v]})
+                near.discard(int(a[v]))
+                for d in sorted(near):
+                    propose(v, d)
+            # (b) balance moves: biggest vertices on the most-loaded device
+            # onto the least-loaded ones (what fixes straggler fleets —
+            # boundary traffic alone never sees compute imbalance)
+            cost = self.exec_cost
+            if cost is not None:
+                own = cost[np.arange(g.n), a]
+                load = np.zeros(nd)
+                np.add.at(load, a, own)
+                dmax = int(load.argmax())
+                dmins = np.argsort(load, kind="stable")[:2]
+                on_max = np.flatnonzero(a == dmax)
+                on_max = on_max[np.argsort(-own[on_max],
+                                           kind="stable")][:max(top_k // 2, 4)]
+                for v in on_max.tolist():
+                    if own[v] <= 0:
+                        continue
+                    for d in dmins.tolist():
+                        propose(v, int(d))
+            if not cands:
+                break
+            ts = np.asarray(eng.exec_times(np.stack(cands),
+                                           episode + 1 + r), dtype=float)
+            rounds_done += 1
+            order = np.argsort(ts, kind="stable")
+            if ts[order[0]] >= t:
+                break
+            combined = a.copy()
+            moved: set[int] = set()
+            for i in order.tolist():
+                v, d = moves[i]
+                if ts[i] < t and v not in moved:
+                    combined[v] = d
+                    moved.add(v)
+            pair = np.stack([combined, cands[order[0]]])
+            t2 = np.asarray(eng.exec_times(pair, episode + 101 + r),
+                            dtype=float)
+            if t2[0] <= t2[1] and t2[0] < t:
+                a, t = combined, float(t2[0])
+                moves_applied += len(moved)
+            elif t2[1] < t:
+                a, t = pair[1], float(t2[1])
+                moves_applied += 1
+            else:
+                # noisy engines can re-score the "improving" move worse;
+                # keep monotonicity and stop
+                break
+
+        self.refine_state = RefineState(a.copy(), float(t), rounds_done,
+                                        moves_applied)
+        return a, float(t)
+
+    # ------------------------------------------------- checkpoint plumbing
+    def state_dict(self) -> dict:
+        rs = self.refine_state
+        return {
+            "n_segments": self.config.n_segments,
+            "refine_rounds": self.config.refine_rounds,
+            "refine_top_k": self.config.refine_top_k,
+            "vertex_segment": self.partition.vertex_segment.tolist(),
+            "refine_assignment": (rs.assignment.tolist()
+                                  if rs.assignment is not None else None),
+            "refine_exec_time": (float(rs.exec_time)
+                                 if np.isfinite(rs.exec_time) else None),
+            "rounds_done": rs.rounds_done,
+            "moves_applied": rs.moves_applied,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        saved = np.asarray(state["vertex_segment"], dtype=np.int64)
+        if (saved.shape != self.partition.vertex_segment.shape
+                or (saved != self.partition.vertex_segment).any()):
+            raise ValueError(
+                "hierarchical checkpoint was saved against a different "
+                "partition (vertex->segment map mismatch); rebuild the "
+                "trainer with the same graph and HierarchyConfig")
+        a = state.get("refine_assignment")
+        te = state.get("refine_exec_time")
+        self.refine_state = RefineState(
+            assignment=np.asarray(a, dtype=np.int64) if a is not None
+            else None,
+            exec_time=float(te) if te is not None else float("inf"),
+            rounds_done=int(state.get("rounds_done", 0)),
+            moves_applied=int(state.get("moves_applied", 0)))
+
+
+class ExpandingEngine(RewardEngine):
+    """Score segment-level assignments through a flat-graph engine.
+
+    Wraps any reward source for the *flat* graph; ``exec_times`` expands
+    each segment assignment row through the partition's vertex->segment
+    map and delegates.  Capability flags are inherited, so the trainer
+    and evaluator treat the composite exactly like the inner engine."""
+
+    def __init__(self, policy: HierarchicalPolicy, flat_engine):
+        self.policy = policy
+        self.inner = as_engine(flat_engine)
+        self.batched = self.inner.batched
+        self.measured = self.inner.measured
+        self.name = f"hier[{self.inner.name}]"
+
+    @property
+    def deterministic(self) -> bool:
+        return self.inner.deterministic
+
+    def exec_times(self, assignments, episode: int = 0) -> np.ndarray:
+        A = np.asarray(assignments)
+        if A.ndim == 1:
+            A = A[None, :]
+        return self.inner.exec_times(self.policy.expand(A), episode)
+
+    def evaluate_repeats(self, assignment, n_runs: int,
+                         seed0: int = 1000) -> np.ndarray:
+        return self.inner.evaluate_repeats(
+            self.policy.expand(np.asarray(assignment)), n_runs, seed0=seed0)

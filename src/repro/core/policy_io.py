@@ -32,6 +32,12 @@ def save_policy(ckpt_dir: str | pathlib.Path, trainer) -> pathlib.Path:
         "sel_mode": trainer.sel_mode,
         "plc_mode": trainer.plc_mode,
     }
+    # hierarchical trainers additionally checkpoint the coarsening map
+    # (verified on restore) and the refinement state, so a resumed run
+    # continues the coarsen->place->refine pipeline exactly where the
+    # interrupted one stopped (core/hierarchy.py)
+    if getattr(trainer, "hier", None) is not None:
+        extra["hierarchy"] = trainer.hier.state_dict()
     return save_checkpoint(ckpt_dir, trainer.episode,
                            (trainer.params, trainer.opt_state), extra=extra)
 
@@ -46,6 +52,23 @@ def load_policy(ckpt_dir: str | pathlib.Path, trainer, step: int | None = None):
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     (params, opt_state), extra = restore_checkpoint(
         ckpt_dir, step, (trainer.params, trainer.opt_state))
+    # validate hierarchy compatibility BEFORE mutating the trainer, so an
+    # incompatible checkpoint leaves the trainer untouched (the policy
+    # params are graph-size independent and would otherwise "restore"
+    # silently against the wrong graph)
+    hier_state = extra.get("hierarchy")
+    if hier_state is not None:
+        if getattr(trainer, "hier", None) is None:
+            raise ValueError(
+                "checkpoint is hierarchical (segment-level policy + "
+                "refinement state) but the trainer was built flat; pass "
+                "hierarchy=HierarchyConfig(n_segments="
+                f"{hier_state['n_segments']}, ...) to DopplerTrainer")
+        trainer.hier.load_state_dict(hier_state)   # validates the map first
+    elif getattr(trainer, "hier", None) is not None:
+        raise ValueError(
+            "trainer is hierarchical but the checkpoint was saved by a "
+            "flat trainer (its params index a different graph)")
     trainer.params = params
     trainer.opt_state = opt_state
     trainer.episode = int(extra["episode"])

@@ -115,7 +115,25 @@ class DopplerTrainer:
                  total_episodes: int = 4000,
                  normalize_adv: bool = True,
                  comm_factor: float = 4.0,
-                 sel_mode: str = "learned", plc_mode: str = "learned"):
+                 sel_mode: str = "learned", plc_mode: str = "learned",
+                 hierarchy=None):
+        # Hierarchical mode (core/hierarchy.py): coarsen the flat graph and
+        # train the *unchanged* dual policy on the segment graph — every
+        # stage, engine, and checkpoint below operates at segment level;
+        # `place()` expands + refines back to the flat graph.
+        self.flat_graph = graph
+        self.hier = None
+        self.hierarchy = None
+        if hierarchy is not None:
+            from ..graphs.partition import coarsen
+            from .hierarchy import HierarchicalPolicy, HierarchyConfig
+            if isinstance(hierarchy, int):
+                hierarchy = HierarchyConfig(n_segments=hierarchy)
+            part = coarsen(graph, hierarchy.n_segments,
+                           cap_factor=hierarchy.cap_factor)
+            self.hierarchy = hierarchy
+            self.hier = HierarchicalPolicy(part, hierarchy, dev)
+            graph = part.seg_graph
         self.g, self.dev = graph, dev
         self.gd = build_graph_data(graph, dev, comm_factor)
         key = jax.random.PRNGKey(seed)
@@ -537,6 +555,59 @@ class DopplerTrainer:
         return self.train_rl(system, n_updates, batch_size=batch_size,
                              stage="sys_batch", log_every=log_every,
                              **ablation)
+
+    # --------------------------------------------------- flat placement
+    def place(self, engine=None, refine: bool = True,
+              include_cp: bool = True, include_flat_cp: bool = False,
+              episode: int | None = None) -> tuple[np.ndarray, float]:
+        """Produce a *flat-graph* assignment (and its engine score).
+
+        Flat trainers: the best-so-far (or greedy) assignment, scored.
+        Hierarchical trainers: candidate segment assignments — the
+        policy's greedy rollout, the best Stage-II sample, and (with
+        ``include_cp``) CRITICAL-PATH runs on the segment graph — are
+        expanded and scored in ONE batched engine call; the winner then
+        takes a bounded boundary-refinement pass on the flat graph
+        (``HierarchicalPolicy.refine``, monotone w.r.t. ``engine``).
+
+        ``include_flat_cp`` additionally seeds the candidate pool with
+        CRITICAL-PATH runs on the FLAT graph (O(n x devices) python —
+        seconds on 10k-vertex models, hence opt-in).  Because refinement
+        is monotone, this makes ``place() <= flat CP`` a guarantee
+        rather than an expectation — the warm-started hierarchical
+        search never loses to the heuristic it refines.
+
+        ``engine`` is anything :func:`engine.as_engine` accepts and must
+        score FLAT assignments; default: the noise-free compiled twin.
+        """
+        if engine is None:
+            engine = WCSimulator(self.flat_graph, self.dev, choose="fifo",
+                                 noise_sigma=0.0)
+        eng = as_engine(engine)
+        ep = self.episode if episode is None else episode
+        if self.hier is None:
+            a = (self.best_assignment if self.best_assignment is not None
+                 else self.greedy_assignment())
+            return np.asarray(a), float(eng.exec_times(
+                np.asarray(a)[None, :], ep)[0])
+        cands = [self.greedy_assignment()]
+        if self.best_assignment is not None:
+            cands.append(np.asarray(self.best_assignment))
+        if include_cp:
+            # CP on the SEGMENT graph is cheap — try a few tie-break seeds
+            cands += [critical_path_assignment(self.g, self.dev, seed=s)
+                      for s in range(3)]
+        flat = [self.hier.expand(c) for c in cands]
+        if include_flat_cp:
+            flat += [critical_path_assignment(self.flat_graph, self.dev,
+                                              seed=s) for s in range(3)]
+        flat = np.stack(flat)
+        ts = np.asarray(eng.exec_times(flat, ep), dtype=float)
+        k = int(ts.argmin())
+        a, t = flat[k], float(ts[k])
+        if refine:
+            a, t = self.hier.refine(a, eng, episode=ep)
+        return a, t
 
     # -------------------------------------------------------- evaluation
     def evaluate(self, sim_or_fn, n_runs: int = 10,

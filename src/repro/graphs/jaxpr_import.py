@@ -156,6 +156,7 @@ def jaxpr_to_graph(fn, *example_args, name: str = "jaxpr",
         for ov in eqn.outvars:
             producer[ov] = v
 
+    g.outputs = [producer[ov] for ov in jaxpr.outvars if ov in producer]
     g.freeze()
     if fuse_cheap:
         g = _fuse_cheap(g, cheap_flops)
@@ -210,4 +211,6 @@ def _fuse_cheap(g: DataflowGraph, cheap_flops: float) -> DataflowGraph:
             edges.add((remap[rs], remap[rd]))
     for (s, d) in sorted(edges):
         out.add_edge(s, d)
+    # an absorbed output's value is produced (cost-model-wise) by its root
+    out.outputs = [remap[root(v)] for v in g.outputs]
     return out.freeze()

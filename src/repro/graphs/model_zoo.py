@@ -116,11 +116,23 @@ def layer_spec(cfg, *, seq: int = DEFAULT_SEQ, batch: int = 1,
 
 def import_model(name: str, *, seq: int = DEFAULT_SEQ, batch: int = 1,
                  unit_blocks: int | None = None, fuse_cheap: bool = True,
-                 cheap_flops: float = 1e4) -> DataflowGraph:
+                 cheap_flops: float = 1e4, **full_kwargs) -> DataflowGraph:
     """Trace one layer of registry model `name` into a DataflowGraph.
+
+    ``<arch>:full`` names dispatch to :func:`import_model_full` — the
+    full-depth training-step graph (forward + backward of every layer,
+    tiled across microbatches).
 
     Graphs are cached per (arch, shape) — they are frozen/immutable, so
     sharing is safe; aliases hit the same cache entry."""
+    if name.endswith(FULL_SUFFIX):
+        return import_model_full(name[:-len(FULL_SUFFIX)], seq=seq,
+                                 batch=batch, unit_blocks=unit_blocks,
+                                 fuse_cheap=fuse_cheap,
+                                 cheap_flops=cheap_flops, **full_kwargs)
+    if full_kwargs:
+        raise TypeError(f"unexpected kwargs for a single-block import: "
+                        f"{sorted(full_kwargs)}")
     return _import_model(canonical_arch(name), seq, batch, unit_blocks,
                          fuse_cheap, cheap_flops)
 
@@ -140,3 +152,82 @@ def _import_model(arch: str, seq: int, batch: int,
 def import_all(**kwargs) -> dict[str, DataflowGraph]:
     """{arch: graph} for the full registry — the scenario zoo."""
     return {a: import_model(a, **kwargs) for a in ARCH_IDS}
+
+
+# ------------------------------------------------------------- full models
+FULL_SUFFIX = ":full"
+
+
+def train_step_spec(cfg, *, seq: int = DEFAULT_SEQ, batch: int = 1,
+                    unit_blocks: int | None = None):
+    """(fn, example_args, arg_labels) for one pattern-unit *training step*.
+
+    The unit computes the layer forward pass plus its backward pass (via
+    ``jax.vjp``) and returns ``(y, g_x, g_params)`` — the activation fed
+    to the next repetition, the input cotangent fed to the previous one,
+    and the parameter gradients (exits).  Tiling these units forward
+    (``y -> x``) and backward (``g_x -> g_out``) yields the dataflow
+    graph of a full training step."""
+    layer, (params, x, pos), labels = layer_spec(cfg, seq=seq, batch=batch,
+                                                 unit_blocks=unit_blocks)
+
+    def unit(params, x, g_out, positions):
+        y, vjp = jax.vjp(lambda p, xx: layer(p, xx, positions), params, x)
+        g_params, g_x = vjp(g_out)
+        return y, g_x, g_params
+
+    # layer_spec labels end with ["x", "positions"]; the unit's flattened
+    # invars are (params..., x, g_out, positions)
+    unit_labels = labels[:-2] + ["x", "g_out", "positions"]
+    return unit, (params, x, x, pos), unit_labels
+
+
+def import_model_full(name: str, *, seq: int = DEFAULT_SEQ, batch: int = 1,
+                      microbatches: int = 2, n_layers: int | None = None,
+                      unit_blocks: int | None = None,
+                      fuse_cheap: bool = True,
+                      cheap_flops: float = 1e4) -> DataflowGraph:
+    """Full-depth training-step graph for registry model `name`.
+
+    One block-pattern unit's forward+backward is traced ONCE and tiled
+    structurally (``graphs/partition.tile_graph``) across the model's
+    depth — repetition i's ``x`` comes from repetition i-1's activation,
+    its ``g_out`` from repetition i+1's input cotangent — and then
+    across ``microbatches`` parallel copies sharing the parameter
+    vertices.  A 16-layer model imports in seconds regardless of depth,
+    and the result carries the replication structure that lets
+    ``coarsen`` tile segment labels instead of re-coarsening ~10k
+    vertices."""
+    return _import_model_full(canonical_arch(name), seq, batch,
+                              int(microbatches), n_layers, unit_blocks,
+                              fuse_cheap, cheap_flops)
+
+
+@functools.lru_cache(maxsize=16)
+def _import_model_full(arch: str, seq: int, batch: int, microbatches: int,
+                       n_layers: int | None, unit_blocks: int | None,
+                       fuse_cheap: bool, cheap_flops: float) -> DataflowGraph:
+    from .jaxpr_import import jaxpr_to_graph
+    from .partition import tile_graph
+    cfg = get_config(arch)
+    fn, args, labels = train_step_spec(cfg, seq=seq, batch=batch,
+                                       unit_blocks=unit_blocks)
+    unit = jaxpr_to_graph(fn, *args, name=f"model:{arch}:unit",
+                          fuse_cheap=fuse_cheap, cheap_flops=cheap_flops,
+                          arg_labels=labels)
+    unit_len = len(cfg.block_pattern)
+    if unit_blocks is not None:
+        unit_len = min(unit_len, max(1, unit_blocks))
+    depth = n_layers if n_layers is not None else cfg.n_layers
+    reps = max(1, -(-depth // unit_len))            # ceil division
+    name = f"model:{arch}:full"
+    g = tile_graph(unit, reps, chains=(("x", 0, 1), ("g_out", 1, -1)),
+                   shared_labels=("positions",),
+                   name=name if microbatches <= 1 else f"{name}:chain")
+    if microbatches > 1:
+        per_mb = {"x", f"r{reps - 1}.g_out"} if reps > 1 else {"x", "g_out"}
+        shared = [v.label for v in g.vertices
+                  if g.is_input(v.vid) and v.label not in per_mb]
+        g = tile_graph(g, microbatches, chains=(), shared_labels=shared,
+                       rep_prefix="mb", name=name)
+    return g

@@ -1,0 +1,490 @@
+"""Deterministic graph coarsening + structural replication for hierarchical
+placement (coarsen -> place -> refine).
+
+DOPPLER's SEL/PLC rollout is O(steps x vertices), so flat placement caps
+out at block-pattern units (~100-500 vertices).  Full multi-layer models
+(thousands to tens of thousands of operations) are placed hierarchically:
+
+* :func:`coarsen` contracts a flat :class:`DataflowGraph` into a
+  segment-level ``DataflowGraph`` of roughly ``n_segments`` compute
+  segments (plus one input segment per distinct consumer set).  The dual
+  policy then places *segments*; :meth:`Partition.expand` maps a segment
+  assignment back to a flat one, and ``core/hierarchy.py`` refines the
+  boundary vertices on the flat graph.
+* :func:`tile_graph` replicates a traced block-pattern unit across model
+  depth (and microbatches) in graph space — no re-tracing, no re-fusion —
+  and records the replication structure so :func:`coarsen` only has to
+  coarsen the *unit* once and tile the segment labels (full models
+  compile in seconds).
+
+Conservation contract (mirrors ``jaxpr_import._fuse_cheap`` and enforced
+by tests/test_properties.py): a segment's ``flops`` is the exact sum of
+its members' flops; the per-member byte totals are recoverable through
+``vertex_segment``; and a segment edge (s, t) exists iff some flat edge
+crosses s -> t (reachability is conserved, never invented).  The segment
+vertex's ``out_bytes`` is its *boundary-transfer* total: the bytes of
+members whose results cross the segment boundary — what a segment-level
+transfer actually has to move.
+
+Coarsening is deterministic (pure numpy / ordered python — no RNG), so
+the same graph always yields the same partition; checkpoints store the
+``vertex_segment`` map and can verify it on resume.
+
+Acyclicity: contraction alternates two provably-safe passes on the
+current quotient DAG — merging a cluster into its *unique successor*
+(clusters form in-trees: every external out-edge leaves from the root,
+so a quotient cycle would imply a cycle in the pass-start DAG) and the
+symmetric unique-predecessor pass — then falls back to packing clusters
+in topological order (edges only go forward across bins).  The segment
+graph's ``freeze()`` re-validates acyclicity at the end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.graph import DataflowGraph
+
+__all__ = ["Partition", "Replication", "coarsen", "tile_graph"]
+
+
+# ---------------------------------------------------------------------------
+# Replication metadata (attached to tiled graphs)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Replication:
+    """How a flat graph was tiled from a repeated unit.
+
+    ``unit_vid[v]`` is the unit vertex that flat vertex ``v`` instantiates
+    and ``rep_of[v]`` the repetition index (shared vertices — e.g. the
+    position ids every layer reads — count as repetition 0).
+
+    ``phase`` (per *unit* vertex) marks the chain phase when the tiling
+    has a backward chain: 1 for vertices reachable from a negative-step
+    chain input (the backward pass), else 0.  Tiled cross-repetition
+    edges run phase0(i) -> phase0/1(i+1) and phase1(i+1) -> phase1(i),
+    and no backward vertex ever feeds a forward one (reachability from
+    the cotangent input is successor-closed) — so any coarsening that
+    never merges across phases tiles into an acyclic segment quotient.
+    """
+    unit: DataflowGraph
+    n_rep: int
+    unit_vid: np.ndarray            # (n_flat,) -> unit vertex id
+    rep_of: np.ndarray              # (n_flat,) -> repetition index
+    phase: np.ndarray | None = None  # (unit.n,) chain phase, or None
+
+
+# ---------------------------------------------------------------------------
+# Partition
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Partition:
+    """A coarsening of ``flat`` into ``seg_graph`` segments."""
+    flat: DataflowGraph
+    seg_graph: DataflowGraph
+    vertex_segment: np.ndarray      # (n_flat,) -> segment id
+    seg_flops: np.ndarray           # (S,) exact sum of member flops
+    seg_bytes: np.ndarray           # (S,) sum of member out_bytes
+    boundary_bytes: np.ndarray      # (S,) member bytes crossing the boundary
+    cross_bytes: np.ndarray         # (seg_graph.m,) bytes per segment edge
+
+    @property
+    def n_segments(self) -> int:
+        return self.seg_graph.n
+
+    def members(self, s: int) -> np.ndarray:
+        return np.flatnonzero(self.vertex_segment == s)
+
+    def expand(self, seg_assignment) -> np.ndarray:
+        """Segment assignment(s) -> flat assignment(s).
+
+        Accepts a single ``(S,)`` row or a batch ``(K, S)``; the trailing
+        axis is expanded to ``flat.n`` through the vertex->segment map."""
+        a = np.asarray(seg_assignment)
+        if a.shape[-1] != self.n_segments:
+            raise ValueError(f"segment assignment has {a.shape[-1]} entries,"
+                             f" expected {self.n_segments}")
+        return a[..., self.vertex_segment]
+
+
+# ---------------------------------------------------------------------------
+# Coarsening
+# ---------------------------------------------------------------------------
+def coarsen(graph: DataflowGraph, n_segments: int,
+            cap_factor: float = 2.0) -> Partition:
+    """Contract ``graph`` toward ``n_segments`` compute segments.
+
+    ``cap_factor`` bounds segment imbalance: no contraction may grow a
+    segment past ``cap_factor * total_flops / n_segments`` (packing's
+    final bin may exceed it when the target forces it).
+
+    Tiled graphs (see :func:`tile_graph`) take the structural fast path:
+    the unit is coarsened once and its labels are tiled across every
+    repetition, so cost is independent of model depth.
+    """
+    n_segments = max(1, int(n_segments))
+    rep = getattr(graph, "replication", None)
+    if rep is not None and n_segments < graph.n and rep.n_rep > 1:
+        per_unit = max(1, int(round(n_segments / rep.n_rep)))
+        unit_labels = _coarsen_labels(rep.unit, per_unit, cap_factor,
+                                      phase=rep.phase)
+        width = int(unit_labels.max()) + 1
+        labels = unit_labels[rep.unit_vid] + rep.rep_of * width
+        return _partition_from_labels(graph, labels)
+    return _partition_from_labels(
+        graph, _coarsen_labels(graph, n_segments, cap_factor))
+
+
+def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
+                    phase: np.ndarray | None = None) -> np.ndarray:
+    """(n,) raw cluster labels: compute-vertex contraction + input grouping.
+
+    Input vertices never mix with compute clusters (they are free and
+    resident everywhere in the WC engines); each distinct consumer-cluster
+    set becomes one input cluster.  When ``phase`` is given (chain-tiled
+    units, see :class:`Replication`), clusters never span phases — the
+    invariant that keeps the tiled segment quotient acyclic."""
+    n = g.n
+    is_input = g.input_mask()
+    compute = np.flatnonzero(~is_input)
+    flops = g.flops_array()
+    phase = (np.zeros(n, dtype=np.int64) if phase is None
+             else np.asarray(phase, dtype=np.int64))
+
+    parent = np.arange(n)
+
+    def find(v: int) -> int:
+        r = v
+        while parent[r] != r:
+            r = parent[r]
+        while parent[v] != r:
+            parent[v], v = r, parent[v]
+        return r
+
+    cflops = flops.copy()
+    n_clusters = len(compute)
+    if n_clusters > target:
+        cap = max(float(flops.sum()) * cap_factor / target,
+                  float(flops.max(initial=0.0)))
+        pos = np.empty(n, dtype=np.int64)
+        pos[g.topo_order] = np.arange(n)
+
+        def compute_edges():
+            """Unique (cluster, cluster) pairs over compute-only edges."""
+            pairs = set()
+            for (u, v) in g.edges:
+                if is_input[u] or is_input[v]:
+                    continue
+                cu, cv = find(u), find(v)
+                if cu != cv:
+                    pairs.add((cu, cv))
+            return pairs
+
+        for _ in range(32):
+            if n_clusters <= target:
+                break
+            merged = 0
+            for direction in ("succ", "pred"):
+                if n_clusters <= target:
+                    break
+                pairs = compute_edges()
+                degree: dict[int, list] = {}
+                for (cu, cv) in pairs:
+                    key, other = (cu, cv) if direction == "succ" else (cv, cu)
+                    degree.setdefault(key, []).append(other)
+                # unique-neighbor merges, applied in (topo-first) order so
+                # chained merges respect the flops cap incrementally;
+                # cross-phase merges are forbidden (see Replication.phase)
+                cands = sorted((c for c, outs in degree.items()
+                                if len(outs) == 1
+                                and phase[c] == phase[outs[0]]),
+                               key=lambda c: (pos[c], c),
+                               reverse=direction == "pred")
+                for c in cands:
+                    if n_clusters <= target:
+                        break
+                    rc = find(c)
+                    if rc != c:                    # already absorbed this pass
+                        continue
+                    ro = find(degree[c][0])
+                    if ro == rc or cflops[rc] + cflops[ro] > cap:
+                        continue
+                    parent[rc] = ro
+                    cflops[ro] += cflops[rc]
+                    n_clusters -= 1
+                    merged += 1
+            if not merged:
+                break
+
+        if n_clusters > target:
+            # topological packing: clusters in topo-first order into bins
+            # bounded by the mean-flops budget (edges only go forward, so
+            # the quotient over bins stays acyclic); one bin stream per
+            # phase so packed bins never span phases either
+            roots = sorted({find(int(v)) for v in compute},
+                           key=lambda c: (pos[c], c))
+            phases = sorted({int(phase[c]) for c in roots})
+            total = float(flops.sum())
+            bin_of: dict[int, int] = {}
+            next_bin = 0
+            for p in phases:
+                roots_p = [c for c in roots if phase[c] == p]
+                flops_p = float(sum(cflops[c] for c in roots_p))
+                target_p = max(1, int(round(target * flops_p
+                                            / max(total, 1e-30))))
+                budget = flops_p / target_p
+                b, acc, bins_used = next_bin, 0.0, 1
+                for c in roots_p:
+                    f = float(cflops[c])
+                    if acc > 0 and acc + f > budget and bins_used < target_p:
+                        b += 1
+                        bins_used += 1
+                        acc = 0.0
+                    bin_of[c] = b
+                    acc += f
+                next_bin = b + 1
+            pack = np.empty(n, dtype=np.int64)
+            for v in compute:
+                pack[v] = bin_of[find(int(v))]
+
+            labels_compute = pack
+        else:
+            labels_compute = None
+    else:
+        labels_compute = None
+
+    labels = np.full(n, -1, dtype=np.int64)
+    if labels_compute is not None:
+        labels[compute] = labels_compute[compute]
+    else:
+        # root ids, compacted later by _partition_from_labels
+        for v in compute:
+            labels[v] = find(int(v))
+
+    # input grouping: one cluster per distinct consumer-cluster set
+    base = int(labels.max(initial=0)) + 1
+    groups: dict[tuple, int] = {}
+    for v in np.flatnonzero(is_input):
+        key = tuple(sorted({int(labels[w]) for w in g.succs[v]}))
+        gid = groups.get(key)
+        if gid is None:
+            gid = groups[key] = base + len(groups)
+        labels[v] = gid
+    return labels
+
+
+def _partition_from_labels(g: DataflowGraph, raw: np.ndarray) -> Partition:
+    """Compact raw labels (topo-first order), build the segment graph."""
+    n = g.n
+    raw = np.asarray(raw, dtype=np.int64)
+    pos = np.empty(n, dtype=np.int64)
+    pos[g.topo_order] = np.arange(n)
+
+    first_pos: dict[int, int] = {}
+    first_vid: dict[int, int] = {}
+    for v in range(n):
+        lbl = int(raw[v])
+        if lbl not in first_pos or pos[v] < first_pos[lbl]:
+            first_pos[lbl] = int(pos[v])
+        if lbl not in first_vid or v < first_vid[lbl]:
+            first_vid[lbl] = v
+    order = sorted(first_pos, key=lambda lbl: (first_pos[lbl],
+                                               first_vid[lbl]))
+    seg_of_label = {lbl: s for s, lbl in enumerate(order)}
+    seg = np.array([seg_of_label[int(raw[v])] for v in range(n)],
+                   dtype=np.int64)
+    S = len(order)
+
+    flops = g.flops_array()
+    out_bytes = g.out_bytes_array()
+    is_input = g.input_mask()
+
+    seg_flops = np.zeros(S)
+    np.add.at(seg_flops, seg, flops)
+    seg_bytes = np.zeros(S)
+    np.add.at(seg_bytes, seg, out_bytes)
+
+    # boundary bytes: each member with >= 1 consumer outside its segment
+    # contributes its out_bytes once
+    crosses_out = np.zeros(n, dtype=bool)
+    E = g.edge_array()
+    cross_edges = []
+    if len(E):
+        cross = seg[E[:, 0]] != seg[E[:, 1]]
+        crosses_out[E[cross, 0]] = True
+        cross_edges = E[cross]
+    boundary = np.zeros(S)
+    np.add.at(boundary, seg[crosses_out], out_bytes[crosses_out])
+
+    # segment edges + per-edge transfer byte totals (each producer counted
+    # once per destination segment — the transfer-dedup convention of
+    # simulator.consumers_on)
+    edge_bytes: dict[tuple[int, int], float] = {}
+    seen_pairs: set[tuple[int, int]] = set()
+    for (u, v) in cross_edges:
+        key = (int(seg[u]), int(seg[v]))
+        pkey = (int(u), int(seg[v]))
+        if pkey in seen_pairs:
+            continue
+        seen_pairs.add(pkey)
+        edge_bytes[key] = edge_bytes.get(key, 0.0) + float(out_bytes[u])
+
+    # representative member per segment: the max-flops non-input member
+    # (lowest vid on ties) names the segment's kind/label
+    rep_member = np.full(S, -1, dtype=np.int64)
+    for v in range(n):
+        s = seg[v]
+        r = rep_member[s]
+        if r < 0 or (not is_input[v]
+                     and (is_input[r] or flops[v] > flops[r])):
+            rep_member[s] = v
+
+    out = DataflowGraph(f"{g.name}|seg{S}")
+    for s in range(S):
+        r = int(rep_member[s])
+        vert = g.vertices[r]
+        if is_input[r]:
+            out.add_vertex("input", out_bytes=float(seg_bytes[s]),
+                           label=f"seg{s}:{vert.label}" if vert.label
+                           else f"seg{s}")
+        else:
+            out.add_vertex(vert.kind, flops=float(seg_flops[s]),
+                           out_bytes=float(boundary[s]), meta_op=s,
+                           role="shard",
+                           label=f"seg{s}:{vert.label}" if vert.label
+                           else f"seg{s}")
+    for (s, t) in sorted(edge_bytes):
+        out.add_edge(s, t)
+    out.freeze()
+
+    cross_arr = np.array([edge_bytes[(s, t)] for (s, t) in out.edges],
+                         dtype=np.float64)
+    return Partition(flat=g, seg_graph=out, vertex_segment=seg,
+                     seg_flops=seg_flops, seg_bytes=seg_bytes,
+                     boundary_bytes=boundary, cross_bytes=cross_arr)
+
+
+# ---------------------------------------------------------------------------
+# Structural replication (tiling)
+# ---------------------------------------------------------------------------
+def tile_graph(unit: DataflowGraph, n_rep: int, *,
+               chains=(("x", 0, 1),),
+               shared_labels=("positions",),
+               rep_prefix: str = "r",
+               name: str | None = None) -> DataflowGraph:
+    """Tile ``unit`` ``n_rep`` times into one flat DataflowGraph.
+
+    chains: iterable of ``(input_label, output_index, step)`` — the chain
+    contract between repetitions.  Repetition ``i``'s input vertex
+    labeled ``input_label`` is replaced by repetition ``i - step``'s
+    ``unit.outputs[output_index]`` instance when that repetition exists;
+    at the boundary (``i - step`` outside ``[0, n_rep)``) the input
+    vertex is kept as a real graph input.  ``step=1`` is a forward chain
+    (layer i consumes layer i-1's activation), ``step=-1`` a backward
+    chain (layer i consumes layer i+1's input-cotangent) — together they
+    tile a full training step.
+
+    shared_labels: input labels instantiated once and shared by every
+    repetition (position ids; for microbatch tiling, the parameters).
+
+    The result carries a :class:`Replication` (``.replication``) so
+    :func:`coarsen` can tile the unit's segment labels instead of
+    re-coarsening the full graph; tiling a graph that is itself tiled
+    composes the maps down to the innermost unit.
+    """
+    if n_rep < 1:
+        raise ValueError("n_rep must be >= 1")
+    if not getattr(unit, "_frozen", False):
+        raise ValueError("unit graph must be frozen")
+    label_of = {v.label: v.vid for v in unit.vertices}
+    chain_in: dict[int, tuple[int, int]] = {}      # input vid -> (out vid, step)
+    for (lbl, out_idx, step) in chains:
+        if lbl not in label_of:
+            raise KeyError(f"chain input {lbl!r} not found in {unit.name}")
+        if out_idx >= len(unit.outputs):
+            raise ValueError(f"unit {unit.name} records {len(unit.outputs)} "
+                             f"outputs; chain wants index {out_idx}")
+        vin = label_of[lbl]
+        if not unit.is_input(vin):
+            raise ValueError(f"chain vertex {lbl!r} is not an input")
+        chain_in[vin] = (unit.outputs[out_idx], int(step))
+    shared = {label_of[lbl] for lbl in shared_labels if lbl in label_of}
+    shared -= set(chain_in)
+
+    meta_width = max((v.meta_op for v in unit.vertices), default=-1) + 1
+    out = DataflowGraph(name or f"{unit.name}x{n_rep}")
+    # vid_of[i][u] = flat vertex of unit vertex u in repetition i
+    vid_of = [dict() for _ in range(n_rep)]
+    flat_unit_vid: list[int] = []
+    flat_rep_of: list[int] = []
+
+    def add_copy(i: int, u: int) -> int:
+        vert = unit.vertices[u]
+        lbl = vert.label if i == 0 else f"{rep_prefix}{i}.{vert.label}"
+        meta = vert.meta_op + i * meta_width if vert.meta_op >= 0 else -1
+        vid = out.add_vertex(vert.kind, vert.flops, vert.out_bytes,
+                             meta, vert.role, lbl, vert.out_shape)
+        flat_unit_vid.append(u)
+        flat_rep_of.append(i)
+        return vid
+
+    for i in range(n_rep):
+        for u in range(unit.n):
+            if u in shared:
+                if i == 0:
+                    vid_of[0][u] = add_copy(0, u)
+                vid_of[i][u] = vid_of[0][u]
+            elif u in chain_in:
+                j = i - chain_in[u][1]
+                if 0 <= j < n_rep:
+                    continue            # replaced by rep j's output vertex
+                vid_of[i][u] = add_copy(i, u)
+            else:
+                vid_of[i][u] = add_copy(i, u)
+
+    edges: set[tuple[int, int]] = set()
+    for i in range(n_rep):
+        for (a, b) in unit.edges:
+            if a in chain_in:
+                ov, step = chain_in[a]
+                j = i - step
+                src = vid_of[j][ov] if 0 <= j < n_rep else vid_of[i][a]
+            else:
+                src = vid_of[i][a]
+            edges.add((src, vid_of[i][b]))
+    for (s, d) in sorted(edges):
+        out.add_edge(s, d)
+    out.outputs = [vid_of[n_rep - 1][ov] for ov in unit.outputs
+                   if ov in vid_of[n_rep - 1]]
+    out.freeze()
+
+    unit_vid = np.asarray(flat_unit_vid, dtype=np.int64)
+    rep_of = np.asarray(flat_rep_of, dtype=np.int64)
+    inner = getattr(unit, "replication", None)
+    if inner is not None:
+        out.replication = Replication(
+            unit=inner.unit, n_rep=n_rep * inner.n_rep,
+            unit_vid=inner.unit_vid[unit_vid],
+            rep_of=rep_of * inner.n_rep + inner.rep_of[unit_vid],
+            phase=inner.phase)
+    else:
+        # chain phase: everything reachable from a backward (step < 0)
+        # chain input is phase 1 — coarsening must not merge across
+        # phases or the tiled segment quotient would cycle
+        phase = None
+        neg = [vin for vin, (_, step) in chain_in.items() if step < 0]
+        if neg:
+            phase = np.zeros(unit.n, dtype=np.int64)
+            stack = list(neg)
+            phase[neg] = 1
+            while stack:
+                u = stack.pop()
+                for w in unit.succs[u]:
+                    if not phase[w]:
+                        phase[w] = 1
+                        stack.append(w)
+        out.replication = Replication(unit=unit, n_rep=n_rep,
+                                      unit_vid=unit_vid, rep_of=rep_of,
+                                      phase=phase)
+    return out

@@ -147,9 +147,13 @@ MODEL_PREFIX = "model:"
 
 def list_workloads() -> list[str]:
     """All addressable workload names: the four Appendix-D synthetic
-    graphs plus one ``model:<arch>`` entry per registry architecture."""
-    from .model_zoo import zoo_model_names
-    return sorted(WORKLOADS) + [MODEL_PREFIX + a for a in zoo_model_names()]
+    graphs plus, per registry architecture, one single-block
+    ``model:<arch>`` entry and one full-depth ``model:<arch>:full``
+    training-step entry."""
+    from .model_zoo import FULL_SUFFIX, zoo_model_names
+    return (sorted(WORKLOADS)
+            + [MODEL_PREFIX + a for a in zoo_model_names()]
+            + [MODEL_PREFIX + a + FULL_SUFFIX for a in zoo_model_names()])
 
 
 def get_workload(name: str, **kwargs) -> DataflowGraph:
@@ -157,7 +161,11 @@ def get_workload(name: str, **kwargs) -> DataflowGraph:
 
     ``model:<arch>`` names import one layer of the registry architecture
     through the jaxpr pipeline (see graphs/model_zoo.py); kwargs are
-    forwarded (seq=, batch=, unit_blocks=, cheap_flops=)."""
+    forwarded (seq=, batch=, unit_blocks=, cheap_flops=).
+    ``model:<arch>:full`` names build the full-depth training-step graph
+    (forward + backward of all layers, tiled across ``microbatches=``
+    copies) — thousands of vertices, placed hierarchically (see
+    graphs/partition.py and core/hierarchy.py)."""
     if name.startswith(MODEL_PREFIX):
         from .model_zoo import import_model
         return import_model(name[len(MODEL_PREFIX):], **kwargs)

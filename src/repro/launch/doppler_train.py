@@ -88,6 +88,15 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["learned", "cp"])
     ap.add_argument("--plc-mode", default="learned",
                     choices=["learned", "etf"])
+    ap.add_argument("--hierarchy", type=int, default=0, metavar="SEGMENTS",
+                    help="hierarchical coarsen->place->refine with this "
+                         "target segment count (0 = flat placement); use "
+                         "for full-model graphs (model:<arch>:full)")
+    ap.add_argument("--refine-rounds", type=int, default=2,
+                    help="bounded boundary-refinement rounds after "
+                         "hierarchical placement")
+    ap.add_argument("--refine-top-k", type=int, default=16,
+                    help="boundary vertices re-placed per refinement round")
     return ap
 
 
@@ -120,30 +129,62 @@ def main(argv=None):
               f"measurements: overhead={cal.exec_overhead} "
               f"rel_residual={cal.rel_residual:.3f}")
 
+    hier_cfg = None
+    if args.hierarchy:
+        from ..core.hierarchy import HierarchyConfig
+        hier_cfg = HierarchyConfig(n_segments=args.hierarchy,
+                                   refine_rounds=args.refine_rounds,
+                                   refine_top_k=args.refine_top_k)
+
     total = (args.stage1 + args.stage2 * args.stage2_batch
              + args.stage3 * args.stage3_batch)
     trainer = DopplerTrainer(g, dev_twin, seed=args.seed,
                              total_episodes=max(total, 1),
                              lr0=args.lr0, lr1=args.lr1,
-                             sel_mode=args.sel_mode, plc_mode=args.plc_mode)
+                             sel_mode=args.sel_mode, plc_mode=args.plc_mode,
+                             hierarchy=hier_cfg)
     if args.resume and args.ckpt_dir:
         load_policy(args.ckpt_dir, trainer)
         print(f"resumed at episode {trainer.episode}")
 
-    sim = WCSimulator(g, dev_twin, choose="fifo", noise_sigma=args.noise)
+    # policy graph: the segment graph when hierarchical, else the flat one.
+    # Stage II trains against it; Stage III and the final evaluation score
+    # flat assignments (through ExpandingEngine when hierarchical).
+    pg = trainer.g
+    if hier_cfg is not None:
+        print(f"hierarchy: {g.n}-vertex graph -> {pg.n} segments "
+              f"(refine {args.refine_rounds}x{args.refine_top_k})")
+    sim = WCSimulator(pg, dev_twin, choose="fifo", noise_sigma=args.noise)
     if args.system == "executor":
         stage3_engine = ExecutorRewardEngine(executor, repeats=args.repeats)
         real_eval = stage3_engine
     else:
-        real = WCSimulator(g, dev, choose="fifo", noise_sigma=0.08)
-        stage3_engine = SimRewardEngine(real)
-        real_eval = real
+        real_eval = SimRewardEngine(
+            WCSimulator(g, dev, choose="fifo", noise_sigma=0.08))
+        stage3_engine = real_eval
+    if hier_cfg is not None:
+        from ..core.hierarchy import ExpandingEngine
+        stage3_engine = ExpandingEngine(trainer.hier, stage3_engine)
 
-    cp_a, cp_t = best_critical_path(g, dev_twin,
-                                    lambda a: sim.exec_time(a, seed=0),
-                                    n_trials=30)
-    print(f"{args.graph} on {args.devices}: CP={cp_t*1e3:.2f}ms "
-          f"EnumOpt={sim.exec_time(enumerative_assignment(g, dev_twin))*1e3:.2f}ms")
+    # flat CRITICAL-PATH baseline: the historical protocol (scored on the
+    # noisy Stage-II twin at seed=0), via the compiled batch engine so
+    # full-model graphs stay cheap; fewer trials there — one CP run is
+    # O(n * devices) python
+    # flat trainers: `sim` already is the flat noisy twin — reuse it (one
+    # compiled engine + shared plan cache) instead of building a second
+    flat_sim = sim if hier_cfg is None else WCSimulator(
+        g, dev_twin, choose="fifo", noise_sigma=args.noise)
+    flat_eval = WCSimulator(g, dev_twin, choose="fifo", noise_sigma=0.0)
+    cp_trials = 30 if g.n <= 1500 else 5
+    cp_a, cp_t = best_critical_path(
+        g, dev_twin, lambda a: flat_sim.batch_engine.exec_time(a, seed=0),
+        n_trials=cp_trials)
+    enum_txt = ""
+    if g.n <= 1500:
+        enum_t = flat_sim.batch_engine.exec_time(
+            enumerative_assignment(g, dev_twin), seed=0)
+        enum_txt = f" EnumOpt={enum_t*1e3:.2f}ms"
+    print(f"{args.graph} on {args.devices}: CP={cp_t*1e3:.2f}ms{enum_txt}")
 
     # ------------------------------------------------------------ Stage I
     if args.stage1:
@@ -165,7 +206,7 @@ def main(argv=None):
                                        batch_size=args.stage2_batch,
                                        log_every=log)
         elif args.engine == "jax":
-            trainer.train_rl(JaxOracleEngine(g, dev_twin), args.stage2,
+            trainer.train_rl(JaxOracleEngine(pg, dev_twin), args.stage2,
                              batch_size=args.stage2_batch, stage="sim_jax",
                              log_every=log)
         else:                                                # fused
@@ -188,14 +229,31 @@ def main(argv=None):
         _save_stage(args, trainer, "stage3")
 
     # --------------------------------------------------------------- eval
-    mean, std, a = trainer.evaluate(real_eval)
+    if hier_cfg is not None:
+        # flat placement: best-of(policy greedy, best sample, segment-CP)
+        # expanded, then bounded boundary refinement on the flat graph
+        # (refined against the noise-free twin; reported on real_eval)
+        a, _ = trainer.place(engine=flat_eval)
+        mean, std = eval_mean_std_engine(real_eval, a)
+    else:
+        mean, std, a = trainer.evaluate(real_eval)
     print(f"DOPPLER best: {mean*1e3:.2f} +- {std*1e3:.2f} ms "
           f"({100*(1 - mean/cp_t):+.1f}% vs CP)")
-    res = sim.run(a, record=True)
-    print(utilization_ascii(res))
-    if args.trace:
-        write_chrome_trace(args.trace, res, g)
-        print(f"perfetto trace: {args.trace}")
+    if args.trace or g.n <= 2000:
+        res = WCSimulator(g, dev_twin, choose="fifo",
+                          noise_sigma=args.noise).run(a, record=True)
+        print(utilization_ascii(res))
+        if args.trace:
+            write_chrome_trace(args.trace, res, g)
+            print(f"perfetto trace: {args.trace}")
+
+
+def eval_mean_std_engine(engine, assignment, n_runs: int = 10):
+    """mean/std of repeated flat-assignment evaluations via the engine."""
+    import numpy as _np
+    from ..core.engine import as_engine
+    ts = as_engine(engine).evaluate_repeats(assignment, n_runs)
+    return float(_np.mean(ts)), float(_np.std(ts))
 
 
 if __name__ == "__main__":

@@ -73,3 +73,15 @@ def diamond():
 @pytest.fixture
 def dev4():
     return uniform_box(4)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/* fingerprints from the current zoo "
+             "instead of comparing against them")
+
+
+@pytest.fixture
+def update_goldens(request):
+    return request.config.getoption("--update-goldens")

@@ -1,0 +1,104 @@
+"""Cross-engine conformance matrix.
+
+One parametrized test runs the SAME (graph, fleet, assignment, seed)
+through every reward engine and asserts the documented exactness tiers
+(docs/SIMULATOR.md):
+
+* ``SimRewardEngine(serial)`` vs ``SimRewardEngine(batched)`` —
+  BIT-IDENTICAL, for every strategy and noise level;
+* ``JaxOracleEngine`` vs the f64 serial engine — <= 1e-6 relative
+  (f32 cost tables; noise-free 'fifo' scope);
+* ``CallableEngine``-wrapped variants — exactly the wrapped engine's
+  numbers (the adapter adds no arithmetic).
+
+Engine drift now fails loudly instead of silently skewing Stage II.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_chain, make_diamond, random_dag
+from repro.core.devices import (get_device_model, mixed_generation_box,
+                                uniform_box)
+from repro.core.engine import (CallableEngine, JaxOracleEngine,
+                               SimRewardEngine)
+from repro.core.simulator import WCSimulator
+
+JAX_RTOL = 1e-6          # documented f32-oracle tier (observed ~1e-7)
+
+
+def _graph(name):
+    if name == "diamond":
+        return make_diamond(8)
+    if name == "chain":
+        return make_chain(12)
+    return random_dag(np.random.default_rng(5), 24)
+
+
+GRAPHS = ("diamond", "chain", "rand24")
+FLEETS = ("uniform4", "mixed_gen4", "two_pod_2x2")
+
+
+def _fleet(name):
+    if name == "uniform4":
+        return uniform_box(4)
+    return get_device_model(name)
+
+
+@pytest.fixture(scope="module")
+def matrix_case(request):
+    g = _graph(request.param[0])
+    dev = _fleet(request.param[1])
+    A = np.stack([np.random.default_rng(7 + k).integers(0, dev.n, g.n)
+                  for k in range(4)])
+    return g, dev, A
+
+
+@pytest.mark.parametrize(
+    "matrix_case", [(gn, fn) for gn in GRAPHS for fn in FLEETS],
+    indirect=True, ids=[f"{gn}-{fn}" for gn in GRAPHS for fn in FLEETS])
+@pytest.mark.parametrize("choose,sigma", [("fifo", 0.0), ("fifo", 0.1),
+                                          ("dfs", 0.0), ("random", 0.05)])
+def test_engine_conformance_matrix(matrix_case, choose, sigma):
+    g, dev, A = matrix_case
+    episode = 13
+
+    sim = WCSimulator(g, dev, choose=choose, noise_sigma=sigma)
+    serial = SimRewardEngine(sim, sim_engine="serial")
+    batched = SimRewardEngine(sim, sim_engine="batched")
+
+    t_serial = serial.exec_times(A, episode)
+    t_batched = batched.exec_times(A, episode)
+
+    # tier 1: serial <-> batched, bit-identical (any strategy, any noise)
+    np.testing.assert_array_equal(t_serial, t_batched)
+
+    # tier 2: the engine seed convention — row k is the serial reference
+    # run at seed episode*K + k
+    K = A.shape[0]
+    ref = np.array([sim.run(A[k], seed=episode * K + k).makespan
+                    for k in range(K)])
+    np.testing.assert_array_equal(t_serial, ref)
+
+    # tier 3: CallableEngine wrapping adds no arithmetic
+    wrapped = CallableEngine(
+        lambda rows: batched.exec_times(rows, episode), batched=True,
+        deterministic=batched.deterministic)
+    np.testing.assert_array_equal(wrapped.exec_times(A, episode), t_batched)
+
+
+@pytest.mark.parametrize(
+    "matrix_case", [(gn, fn) for gn in GRAPHS for fn in FLEETS],
+    indirect=True, ids=[f"{gn}-{fn}" for gn in GRAPHS for fn in FLEETS])
+def test_jax_oracle_conformance(matrix_case):
+    """The f32 oracle's tier: <= 1e-6 relative vs the f64 serial engine,
+    on its documented scope (noise-free 'fifo')."""
+    g, dev, A = matrix_case
+    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+    serial = SimRewardEngine(sim, sim_engine="serial")
+    oracle = JaxOracleEngine(g, dev)
+    t_serial = serial.exec_times(A, 0)
+    t_oracle = oracle.exec_times(A, 0)
+    np.testing.assert_allclose(t_oracle, t_serial, rtol=JAX_RTOL)
+    # deterministic engines: evaluate_repeats is one episode broadcast
+    reps = oracle.evaluate_repeats(A[0], n_runs=4)
+    assert (reps == reps[0]).all()

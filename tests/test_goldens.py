@@ -1,0 +1,91 @@
+"""Golden-snapshot regression tests for the scenario zoo.
+
+Every registry architecture's imported graph — and the new full-depth
+training-step graphs — is fingerprinted (vertex count, edge count, total
+flops, total bytes, structural topo-hash) against checked-in goldens
+under ``tests/goldens/``.  A cost-model or importer change that silently
+reshapes the zoo now fails here with a diff instead of skewing every
+downstream benchmark.
+
+Refresh after an INTENTIONAL change with:
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+"""
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+from repro.configs.registry import ARCH_IDS
+from repro.graphs.workloads import get_workload
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+SEQ = 64                       # matches the zoo tests' trace shape
+
+# full-depth training-step graphs: one dense and one multi-block-pattern
+# architecture keep the tiling path honest without importing all ten
+FULL_ARCHS = ("olmo_1b", "zamba2_1p2b")
+
+
+def topo_hash(g) -> str:
+    """Structural fingerprint: kinds + exact costs + edges, labels
+    excluded (cosmetic relabeling must not invalidate goldens)."""
+    h = hashlib.sha256()
+    for v in g.vertices:
+        h.update(f"{v.kind}|{float(v.flops).hex()}|"
+                 f"{float(v.out_bytes).hex()}\n".encode())
+    for (s, d) in g.edges:
+        h.update(f"{s}>{d}\n".encode())
+    return h.hexdigest()
+
+
+def fingerprint(g) -> dict:
+    return {
+        "n_vertices": g.n,
+        "n_edges": g.m,
+        "total_flops": float(g.total_flops()),
+        "total_bytes": float(g.out_bytes_array().sum()),
+        "topo_hash": topo_hash(g),
+    }
+
+
+def check_or_update(name: str, g, update: bool):
+    path = GOLDEN_DIR / f"{name}.json"
+    got = fingerprint(g)
+    if update:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        return
+    if not path.exists():
+        pytest.fail(f"no golden for {name!r}; run with --update-goldens "
+                    f"to create {path}")
+    want = json.loads(path.read_text())
+    diffs = {k: (want.get(k), got[k]) for k in got
+             if want.get(k) != got[k]}
+    assert not diffs, (f"{name}: zoo graph drifted from its golden "
+                       f"fingerprint {path.name}: {diffs}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_zoo_block_goldens(arch, update_goldens):
+    g = get_workload(f"model:{arch}", seq=SEQ)
+    check_or_update(arch, g, update_goldens)
+
+
+@pytest.mark.parametrize("arch", FULL_ARCHS)
+def test_zoo_full_goldens(arch, update_goldens):
+    g = get_workload(f"model:{arch}:full", seq=SEQ)
+    check_or_update(f"{arch}_full", g, update_goldens)
+    # the tiled graph must stay hierarchical-fast-path capable
+    assert getattr(g, "replication", None) is not None
+    assert g.replication.n_rep > 1
+
+
+def test_goldens_have_no_strays():
+    """Every checked-in golden corresponds to a current zoo entry."""
+    if not GOLDEN_DIR.exists():
+        pytest.skip("no goldens yet")
+    expected = set(ARCH_IDS) | {f"{a}_full" for a in FULL_ARCHS}
+    present = {p.stem for p in GOLDEN_DIR.glob("*.json")}
+    assert present <= expected, present - expected

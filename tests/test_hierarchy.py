@@ -1,0 +1,257 @@
+"""Hierarchical coarsen -> place -> refine subsystem.
+
+Covers graphs/partition.py (coarsening contracts, structural tiling,
+the replication fast path), core/hierarchy.py (refinement monotonicity,
+the ExpandingEngine adapter), the DopplerTrainer `hierarchy=` wiring
+(stages run unchanged on the segment graph), and the policy_io gap fix:
+hierarchical checkpoints (segment-level params + refinement state + PRNG
+key) resume EXACTLY mid-Stage-II, matching the flat resume-exact
+guarantee.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_chain, make_diamond, random_dag
+from repro.core.devices import get_device_model, uniform_box
+from repro.core.engine import SimRewardEngine
+from repro.core.heuristics import critical_path_assignment
+from repro.core.hierarchy import (ExpandingEngine, HierarchicalPolicy,
+                                  HierarchyConfig, boundary_scores)
+from repro.core.policy_io import load_policy, save_policy
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.graphs.partition import Partition, coarsen, tile_graph
+from repro.graphs.workloads import get_workload, synthetic_layered
+
+HCFG = HierarchyConfig(n_segments=12, refine_rounds=2, refine_top_k=6)
+
+
+def small_trainer(g, dev, hierarchy=HCFG, **kw):
+    kw.setdefault("d_hidden", 16)
+    kw.setdefault("total_episodes", 200)
+    return DopplerTrainer(g, dev, seed=0, hierarchy=hierarchy, **kw)
+
+
+def params_equal(p1, p2) -> bool:
+    l1, l2 = map(jax.tree_util.tree_leaves, (p1, p2))
+    return all((np.asarray(a) == np.asarray(b)).all()
+               for a, b in zip(l1, l2))
+
+
+# ------------------------------------------------------------- coarsening
+def test_coarsen_chain_contracts_toward_target():
+    g = make_chain(40)
+    part = coarsen(g, 5)
+    # a pure chain packs tightly: 5 compute segments + 1 input group
+    n_compute = sum(1 for v in part.seg_graph.vertices if v.kind != "input")
+    assert n_compute == 5
+    assert part.seg_graph.n <= 7
+    # chain boundary bytes: every non-terminal segment exports one result
+    assert (part.boundary_bytes[part.seg_graph.n - 1] == 0
+            or len(part.seg_graph.exit_nodes) >= 1)
+
+
+def test_coarsen_identity_when_target_large(diamond):
+    part = coarsen(diamond, diamond.n * 2)
+    # compute vertices stay singleton segments; inputs group by consumers
+    n_compute = sum(1 for v in diamond.vertices if v.kind != "input")
+    seg_compute = sum(1 for v in part.seg_graph.vertices
+                      if v.kind != "input")
+    assert seg_compute == n_compute
+
+
+def test_segment_graph_is_valid_workload(diamond, dev4):
+    part = coarsen(diamond, 4)
+    sim = WCSimulator(part.seg_graph, dev4, choose="fifo", noise_sigma=0.0)
+    a = np.arange(part.seg_graph.n) % 4
+    assert sim.exec_time(a) > 0
+    cp = critical_path_assignment(part.seg_graph, dev4, seed=0)
+    assert cp.shape == (part.seg_graph.n,)
+
+
+# ----------------------------------------------------------------- tiling
+def _labeled_chain_unit(n=4):
+    from repro.core.graph import DataflowGraph
+    g = DataflowGraph("unit")
+    prev = g.add_vertex("input", out_bytes=1e6, label="x")
+    for i in range(n):
+        v = g.add_vertex("matmul", flops=1e9, out_bytes=1e6, meta_op=i,
+                         label=f"mm{i}")
+        g.add_edge(prev, v)
+        prev = v
+    g.outputs = [prev]
+    return g.freeze()
+
+
+def test_tile_graph_forward_chain():
+    unit = _labeled_chain_unit(4)             # x -> 4 matmuls
+    g = tile_graph(unit, 3, chains=(("x", 0, 1),), shared_labels=())
+    # rep0 keeps its input; reps 1,2 splice onto the previous output
+    assert g.n == 3 * unit.n - 2
+    assert g.replication.n_rep == 3
+    assert g.replication.unit is unit
+    # flat graph is one long chain: exactly one entry, one exit
+    assert len(g.entry_nodes) == 1 and len(g.exit_nodes) == 1
+    # costs conserved: each rep contributes the unit's compute
+    np.testing.assert_allclose(g.total_flops(), 3 * unit.total_flops(),
+                               rtol=1e-12)
+
+
+def test_tile_graph_fwd_bwd_phases_acyclic():
+    """A double chain (activations forward, cotangents backward) tiles
+    into a DAG, and coarsening its replication never merges phases."""
+    g = get_workload("model:olmo_1b:full", seq=64, microbatches=1)
+    rep = g.replication
+    assert rep.phase is not None
+    # backward reachability is successor-closed: no bwd->fwd unit edge
+    for (u, v) in rep.unit.edges:
+        assert not (rep.phase[u] == 1 and rep.phase[v] == 0)
+    part = coarsen(g, 48)                     # freeze() validates the DAG
+    seg_phase = {}
+    for v in range(g.n):
+        s = int(part.vertex_segment[v])
+        p = int(rep.phase[rep.unit_vid[v]])
+        assert seg_phase.setdefault(s, p) == p, "segment spans chain phases"
+
+
+def test_full_model_import_scale_and_fast_path():
+    g = get_workload("model:olmo_1b:full", seq=64)
+    assert g.n >= 5000                        # the full-scale target
+    assert g.replication.n_rep == 32          # 16 layers x 2 microbatches
+    part = coarsen(g, 64)
+    assert 32 <= part.n_segments <= 160
+    # microbatches share parameters: mb copies reuse input vertices
+    g1 = get_workload("model:olmo_1b:full", seq=64, microbatches=1)
+    assert g.n < 2 * g1.n
+
+
+# ------------------------------------------------------------- refinement
+def test_refine_monotone_and_valid(dev4):
+    g = random_dag(np.random.default_rng(3), 60)
+    part = coarsen(g, 10)
+    pol = HierarchicalPolicy(part, HierarchyConfig(n_segments=10,
+                                                   refine_rounds=3,
+                                                   refine_top_k=8), dev4)
+    sim = WCSimulator(g, dev4, choose="fifo", noise_sigma=0.0)
+    eng = SimRewardEngine(sim)
+    a0 = part.expand(np.arange(part.n_segments) % dev4.n)
+    t0 = sim.exec_time(a0)
+    a1, t1 = pol.refine(a0, eng)
+    assert t1 <= t0 + 1e-12
+    assert a1.shape == (g.n,)
+    assert (a1 >= 0).all() and (a1 < dev4.n).all()
+    # reported time is the engine's true score of the returned assignment
+    assert t1 == pytest.approx(sim.exec_time(a1), rel=1e-12)
+    assert pol.refine_state.assignment is not None
+    assert pol.refine_state.exec_time == pytest.approx(t1)
+
+
+def test_expanding_engine_matches_manual_expansion(dev4):
+    g = make_diamond(8)
+    part = coarsen(g, 4)
+    pol = HierarchicalPolicy(part, HCFG, dev4)
+    sim = WCSimulator(g, dev4, choose="fifo", noise_sigma=0.0)
+    eng = ExpandingEngine(pol, sim)
+    assert eng.deterministic and eng.batched
+    seg_A = np.stack([np.arange(part.n_segments) % 4,
+                      np.zeros(part.n_segments, int)])
+    ts = eng.exec_times(seg_A, episode=5)
+    ref = SimRewardEngine(sim).exec_times(part.expand(seg_A), episode=5)
+    np.testing.assert_array_equal(ts, ref)
+
+
+def test_boundary_scores_ignore_inputs_and_local_edges(diamond):
+    a = np.zeros(diamond.n, dtype=int)
+    assert (boundary_scores(diamond, a) == 0).all()     # all local
+    a2 = np.arange(diamond.n) % 2
+    s = boundary_scores(diamond, a2)
+    assert s[diamond.input_mask()].sum() == 0
+    assert s.sum() > 0
+
+
+# ------------------------------------------------- trainer + stages + CLI
+def test_hierarchical_trainer_runs_all_stages(dev4):
+    g = synthetic_layered(24, 6)
+    tr = small_trainer(g, dev4)
+    assert tr.g.n < g.n and tr.flat_graph is g
+    tr.stage1_imitation(3)
+    tr.stage2_sim_batched(2, batch_size=4)
+    tr.train_rl(WCSimulator(tr.g, dev4, noise_sigma=0.0), 1, batch_size=4)
+    a, t = tr.place()
+    assert a.shape == (g.n,)
+    # guarantee: place() never loses to the expanded segment-CP candidate
+    flat_eval = WCSimulator(g, dev4, choose="fifo", noise_sigma=0.0)
+    cp_seg = tr.hier.expand(critical_path_assignment(tr.g, dev4, seed=0))
+    assert t <= flat_eval.batch_engine.exec_time(cp_seg) + 1e-12
+
+
+def test_flat_place_unchanged(diamond, dev4):
+    tr = DopplerTrainer(diamond, dev4, seed=0, d_hidden=16,
+                        total_episodes=50)
+    tr.stage2_sim_batched(1, batch_size=4,
+                          sim=WCSimulator(diamond, dev4, noise_sigma=0.0))
+    a, t = tr.place()
+    assert a.shape == (diamond.n,)
+    assert t == pytest.approx(
+        WCSimulator(diamond, dev4, noise_sigma=0.0).exec_time(a), rel=1e-12)
+
+
+# ------------------------------------------------ policy_io resume-exact
+def test_hierarchical_checkpoint_resume_exact(tmp_path, dev4):
+    """The policy_io gap fix: segment-level params + refinement state +
+    PRNG key round-trip, and the resumed trainer continues Stage II with
+    bit-identical trajectories/params — the flat resume-exact guarantee
+    now holds at both hierarchy levels."""
+    g = synthetic_layered(20, 6)
+    sim_kw = dict(choose="fifo", noise_sigma=0.05)
+
+    def fresh():
+        return small_trainer(g, dev4)
+
+    tr = fresh()
+    sim = WCSimulator(tr.g, dev4, **sim_kw)
+    tr.stage1_imitation(2)
+    tr.stage2_sim_batched(3, sim, batch_size=4)
+    tr.place()                                  # populate refine state
+    save_policy(tmp_path, tr)
+
+    # uninterrupted continuation
+    tr.stage2_sim_batched(3, sim, batch_size=4)
+    ref_params = tr.params
+    ref_hist = [(r.episode, r.exec_time) for r in tr.history]
+    ref_greedy = tr.greedy_assignment()
+
+    # resumed continuation
+    tr2 = fresh()
+    load_policy(tmp_path, tr2)
+    rs, rs2 = tr.hier.refine_state, tr2.hier.refine_state
+    assert rs2.assignment is not None
+    np.testing.assert_array_equal(rs2.assignment, rs.assignment)
+    assert rs2.exec_time == pytest.approx(rs.exec_time)
+    assert rs2.moves_applied == rs.moves_applied
+    sim2 = WCSimulator(tr2.g, dev4, **sim_kw)
+    tr2.stage2_sim_batched(3, sim2, batch_size=4)
+    assert params_equal(ref_params, tr2.params)
+    hist2 = [(r.episode, r.exec_time) for r in tr2.history]
+    assert ref_hist[-3:] == hist2[-3:]
+    np.testing.assert_array_equal(ref_greedy, tr2.greedy_assignment())
+
+
+def test_checkpoint_level_mismatch_raises(tmp_path, dev4):
+    g = synthetic_layered(20, 6)
+    hier = small_trainer(g, dev4)
+    save_policy(tmp_path / "hier", hier)
+    flat = DopplerTrainer(g, dev4, seed=0, d_hidden=16, total_episodes=200)
+    with pytest.raises(ValueError, match="hierarchical"):
+        load_policy(tmp_path / "hier", flat)
+    save_policy(tmp_path / "flat", flat)
+    with pytest.raises(ValueError, match="flat"):
+        load_policy(tmp_path / "flat", small_trainer(g, dev4))
+    # partition mismatch: same graph, different segment count
+    other = small_trainer(
+        g, dev4, hierarchy=dataclasses.replace(HCFG, n_segments=5))
+    with pytest.raises(ValueError, match="partition"):
+        load_policy(tmp_path / "hier", other)

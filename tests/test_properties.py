@@ -1,0 +1,188 @@
+"""Property-based invariant suite: random DAGs x random fleets.
+
+Engine physics invariants that must hold for EVERY reward engine
+(serial reference loop, compiled batch engine, JAX oracle):
+
+* makespan >= the critical-path compute lower bound (noise-free);
+* work-conserving execution does not lose to the bulk-synchronous model;
+* `run_batch` is equivariant under permutation of the assignment rows;
+
+plus the coarsen->expand round-trip contract of graphs/partition.py:
+total flops/bytes conserved through the vertex->segment map, segment
+edges exactly the crossing flat edges (reachability conserved, never
+invented), expansion consistent, and coarsening deterministic.
+
+Runs under real `hypothesis` when installed (CI) and under the seeded
+sampled-check fallback otherwise; `derandomize=True` keeps CI runs
+reproducible.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container has no hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import random_dag
+from repro.core.devices import (DeviceModel, mixed_generation_box,
+                                straggler_box, uniform_box)
+from repro.core.simulator import WCSimulator, synchronous_exec_time
+from repro.graphs.partition import coarsen
+
+FLEETS = {
+    "uniform3": lambda: uniform_box(3),
+    "mixed_gen4": mixed_generation_box,
+    "straggler4": lambda: straggler_box(4, slowdown=0.4),
+}
+
+
+def random_fleet(name: str) -> DeviceModel:
+    return FLEETS[name]()
+
+
+def random_assignment(rng, n, nd):
+    return rng.integers(0, nd, size=n)
+
+
+# --------------------------------------------------------------- invariants
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40),
+       fleet=st.sampled_from(sorted(FLEETS)),
+       choose=st.sampled_from(["fifo", "dfs"]))
+def test_makespan_ge_critical_path_bound(seed, n, fleet, choose):
+    """Noise-free makespan >= the longest pure-compute path at the fastest
+    device rate, for the serial reference AND the compiled batch engine."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = random_fleet(fleet)
+    a = random_assignment(rng, g.n, dev.n)
+    lb = g.critical_path_lower_bound(dev.flops_per_sec)
+    sim = WCSimulator(g, dev, choose=choose, noise_sigma=0.0)
+    t_serial = sim.run(a).makespan
+    t_batched = sim.run_batch(a, engine="batched")[0, 0]
+    assert t_serial >= lb * (1 - 1e-12)
+    assert t_batched >= lb * (1 - 1e-12)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 24),
+       fleet=st.sampled_from(sorted(FLEETS)))
+def test_jax_oracle_ge_critical_path_bound(seed, n, fleet):
+    """The device-resident oracle obeys the same lower bound (f32 slack)."""
+    jax_engine = pytest.importorskip("repro.core.sim_jax")
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = random_fleet(fleet)
+    a = random_assignment(rng, g.n, dev.n)
+    lb = g.critical_path_lower_bound(dev.flops_per_sec)
+    t = float(jax_engine.JaxWCEngine(g, dev).run_batch(a[None, :])[0])
+    assert t >= lb * (1 - 1e-5)
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40),
+       fleet=st.sampled_from(sorted(FLEETS)))
+def test_wc_not_slower_than_synchronous(seed, n, fleet):
+    """Table 1's premise on arbitrary DAGs/fleets: work-conserving
+    execution doesn't lose to the level-wise bulk-synchronous model."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = random_fleet(fleet)
+    a = random_assignment(rng, g.n, dev.n)
+    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+    assert sim.exec_time(a) <= synchronous_exec_time(g, dev, a) * 1.01
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 30),
+       fleet=st.sampled_from(sorted(FLEETS)),
+       sigma=st.sampled_from([0.0, 0.1]))
+def test_run_batch_row_permutation_equivariant(seed, n, fleet, sigma):
+    """run_batch(A)[perm] == run_batch(A[perm]): row k's result depends
+    only on row k's assignment (and the shared seed axis), not on its
+    position in the batch."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = random_fleet(fleet)
+    A = np.stack([random_assignment(rng, g.n, dev.n) for _ in range(5)])
+    seeds = [3, 11]
+    sim = WCSimulator(g, dev, choose="fifo", noise_sigma=sigma)
+    out = sim.run_batch(A, seeds=seeds)
+    perm = rng.permutation(len(A))
+    out_p = sim.run_batch(A[perm], seeds=seeds)
+    np.testing.assert_array_equal(out[perm], out_p)
+
+
+# ----------------------------------------------------- coarsen round trip
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(10, 60),
+       target=st.integers(2, 24), nd=st.integers(2, 5))
+def test_coarsen_expand_round_trip(seed, n, target, nd):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    part = coarsen(g, target)
+    seg = part.vertex_segment
+    S = part.n_segments
+    assert seg.shape == (g.n,)
+    assert seg.min() >= 0 and seg.max() < S
+
+    # conservation: per-segment sums through the vertex->segment map
+    flops = g.flops_array()
+    nbytes = g.out_bytes_array()
+    ref_flops = np.zeros(S)
+    np.add.at(ref_flops, seg, flops)
+    np.testing.assert_allclose(part.seg_flops, ref_flops, rtol=1e-12)
+    np.testing.assert_allclose(part.seg_flops.sum(), flops.sum(),
+                               rtol=1e-9)
+    np.testing.assert_allclose(part.seg_bytes.sum(), nbytes.sum(),
+                               rtol=1e-9)
+    # the segment graph's compute cost equals the flat graph's
+    np.testing.assert_allclose(part.seg_graph.total_flops(),
+                               g.total_flops(), rtol=1e-9)
+
+    # edge reachability conserved, never invented
+    seg_edges = set(map(tuple, part.seg_graph.edges))
+    crossing = {(int(seg[u]), int(seg[v])) for (u, v) in g.edges
+                if seg[u] != seg[v]}
+    assert seg_edges == crossing
+
+    # inputs never mix with compute segments
+    for s in range(S):
+        kinds = {g.vertices[int(v)].kind == "input"
+                 for v in part.members(s)}
+        assert len(kinds) == 1
+        assert (part.seg_graph.vertices[s].kind == "input") == kinds.pop()
+
+    # expansion: every member gets its segment's device; batched expand
+    # agrees with row-wise expand
+    seg_a = rng.integers(0, nd, size=S)
+    flat_a = part.expand(seg_a)
+    assert flat_a.shape == (g.n,)
+    assert (flat_a == seg_a[seg]).all()
+    batch = rng.integers(0, nd, size=(3, S))
+    np.testing.assert_array_equal(
+        part.expand(batch), np.stack([part.expand(r) for r in batch]))
+
+    # determinism: same graph + target -> identical partition
+    again = coarsen(g, target)
+    np.testing.assert_array_equal(seg, again.vertex_segment)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(12, 50),
+       target=st.integers(2, 12))
+def test_coarsened_graph_is_simulable(seed, n, target):
+    """The segment graph is a valid placement problem: the WC engines run
+    it and the makespan respects the (conserved-flops) CP lower bound."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = uniform_box(3)
+    part = coarsen(g, target)
+    sg = part.seg_graph
+    a = rng.integers(0, dev.n, size=sg.n)
+    sim = WCSimulator(sg, dev, choose="fifo", noise_sigma=0.0)
+    t = sim.exec_time(a)
+    assert t >= sg.critical_path_lower_bound(dev.flops_per_sec) - 1e-12
+    serial = sim.run_batch(a, engine="serial")[0, 0]
+    assert t == serial
