@@ -1,0 +1,83 @@
+"""Serving-path benchmark: placements/sec and latency percentiles for the
+zero-shot placement server (launch/place_server.py), plus zero-shot
+placement quality vs the CRITICAL-PATH baseline on held-out graphs.
+
+Rows:
+  serving/cache_hit     cache-hit path: p50/p99 latency, placements/sec
+  serving/cache_miss    miss path (numpy zero-shot + CP pool + sim score)
+  serving/quality/...   per held-out cell: served vs CP makespan ratio
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import budget, emit
+
+from repro.core.devices import HETERO_FLEETS, get_device_model
+from repro.core.heuristics import critical_path_assignment
+from repro.core.simulator import WCSimulator
+from repro.core.training import pretrain, zoo_pretrain_tasks
+from repro.graphs.workloads import get_workload
+from repro.launch.place_server import PlacementServer
+
+HOLDOUT = ("olmo_1b", "zamba2_1p2b")
+
+
+def _pctl(lat_s, q):
+    return float(np.percentile(np.asarray(lat_s) * 1e3, q))   # -> ms
+
+
+def main():
+    seq = budget(16, 64)
+    tasks = zoo_pretrain_tasks(holdout=HOLDOUT, seq=seq,
+                               n_synthetic=budget(1, 4))[:budget(3, 13)]
+    pre = pretrain(tasks, rounds=budget(1, 8), batch_size=budget(4, 16),
+                   imitation_episodes=budget(1, 4))
+    server = PlacementServer(pre["params"], meta=pre["meta"])
+
+    # held-out eval cells: zero-shot archs x hetero fleets + classic
+    # workloads the pretraining zoo never saw at these shapes
+    cells = [(f"model:{a}", f) for a in HOLDOUT for f in HETERO_FLEETS]
+    cells += [("llama_block", f) for f in HETERO_FLEETS[:2]]
+    cells += [("ffnn", f) for f in HETERO_FLEETS[:2]]
+    cells = cells[:budget(4, len(cells))]
+
+    miss_lat, hit_lat, wins = [], [], 0
+    for wname, fleet in cells:
+        kwargs = {"seq": seq} if wname.startswith("model:") else {}
+        g = get_workload(wname, **kwargs)
+        dev = get_device_model(fleet)
+        r_miss = server.place(g, dev)
+        r_hit = server.place(g, dev)
+        assert not r_miss.cache_hit and r_hit.cache_hit
+        miss_lat.append(r_miss.latency_s)
+        hit_lat.append(r_hit.latency_s)
+
+        sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+        cp_ms = min(sim.run(critical_path_assignment(g, dev, seed=s)
+                            ).makespan for s in range(2))
+        ratio = r_miss.makespan / cp_ms
+        wins += ratio <= 1.0 + 1e-9
+        emit(f"serving/quality/{wname.replace('model:', '')}/{fleet}",
+             r_miss.makespan * 1e6,
+             f"vs_cp={ratio:.3f}x source={r_miss.source}")
+
+    # extra hit traffic for stable percentiles (pure cache reads)
+    g0 = get_workload(cells[0][0], **({"seq": seq} if
+                      cells[0][0].startswith("model:") else {}))
+    d0 = get_device_model(cells[0][1])
+    for _ in range(budget(50, 500)):
+        hit_lat.append(server.place(g0, d0).latency_s)
+
+    emit("serving/cache_hit", np.mean(hit_lat) * 1e6,
+         f"p50_ms={_pctl(hit_lat, 50):.3f} p99_ms={_pctl(hit_lat, 99):.3f} "
+         f"placements_per_sec={1.0/max(np.mean(hit_lat), 1e-12):.0f}")
+    emit("serving/cache_miss", np.mean(miss_lat) * 1e6,
+         f"p50_ms={_pctl(miss_lat, 50):.1f} p99_ms={_pctl(miss_lat, 99):.1f} "
+         f"placements_per_sec={1.0/max(np.mean(miss_lat), 1e-12):.2f}")
+    emit("serving/zero_shot_vs_cp", 0.0,
+         f"cells_at_or_below_cp={wins}/{len(cells)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,16 @@ from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer, transfer
 from repro.graphs.workloads import WORKLOADS
 
+TRANSFER_CLASSES = ("same_device", "same_group", "across_groups")
+
+
+def transfer_pcts(counts: dict) -> dict:
+    """App.-J locality percentages over the FIXED class list — a class a
+    simulator build never recorded reads 0, instead of a KeyError when
+    the report indexes it."""
+    tot = max(sum(counts.values()), 1)
+    return {c: 100.0 * counts.get(c, 0) / tot for c in TRANSFER_CLASSES}
+
 
 def main():
     dev = p100_box(4)
@@ -56,9 +66,7 @@ def main():
             tr8.stage2_sim(k, sim8)
         a = tr8.best_assignment if k else tr8.greedy_assignment()
         res = sim8.run(a)
-        tot = max(sum(res.transfer_class_counts.values()), 1)
-        pct = {c: 100.0 * v / tot
-               for c, v in res.transfer_class_counts.items()}
+        pct = transfer_pcts(res.transfer_class_counts)
         emit(f"table4/hw_4p100->8v100/{tag}", res.makespan * 1e6,
              f"ms={res.makespan*1e3:.1f};same_dev={pct['same_device']:.1f}%"
              f";same_group={pct['same_group']:.1f}%"

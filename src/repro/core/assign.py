@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .devices import DeviceModel
-from .features import COMM_FACTOR_DEFAULT, compute_static_features
+from .features import (COMM_FACTOR_DEFAULT, compute_fleet_features,
+                       compute_static_features)
 from .graph import DataflowGraph
 from .nn import masked_entropy, masked_log_softmax
 from .policies import episode_encodings, plc_logits
@@ -47,6 +48,7 @@ class GraphData:
     flops: jnp.ndarray         # (n,)
     total_flops: jnp.ndarray   # ()
     t_level: jnp.ndarray       # (n,) raw t-level cost (CP-ablation select)
+    dev_x: jnp.ndarray         # (nd, N_FLEET_FEATS) static fleet descriptors
 
     def tree_flatten(self):
         fields = dataclasses.astuple(self)
@@ -103,13 +105,15 @@ def build_graph_data(g: DataflowGraph, dev: DeviceModel,
         flops=jnp.asarray(flops, jnp.float32),
         total_flops=jnp.asarray(max(flops.sum(), 1e-9), jnp.float32),
         t_level=jnp.asarray(sf.t_level, jnp.float32),
+        dev_x=jnp.asarray(compute_fleet_features(dev), jnp.float32),
     )
 
 
 # --------------------------------------------------------------- dynamics
 def _device_features(gd: GraphData, v, placed, assigned, est_end,
                      device_avail, dev_comp):
-    """X_D for target vertex v — jnp twin of features.EpisodeState (nd, 5)."""
+    """[X_D || X_F] for target vertex v — jnp twin of
+    features.EpisodeState.device_features, (nd, 5 + N_FLEET_FEATS)."""
     nd = gd.nd
     p = gd.preds[v]                                   # (P,)
     pm = (p >= 0) & placed[jnp.maximum(p, 0)]         # placed preds mask
@@ -130,6 +134,7 @@ def _device_features(gd: GraphData, v, placed, assigned, est_end,
     feats = jnp.stack([dev_comp / gd.total_flops,
                        pred_flops_on / gd.total_flops,
                        f2 / scale, f3 / scale, f4 / scale], axis=1)
+    feats = jnp.concatenate([feats, gd.dev_x], axis=1)
     return feats, f3   # f3 (raw ready-time per device) reused by the update
 
 

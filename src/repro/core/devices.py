@@ -96,6 +96,20 @@ class DeviceModel:
         and fleet perturbations derive fitted/what-if fleets."""
         return dataclasses.replace(self, **kw)
 
+    def fingerprint(self) -> str:
+        """Stable content hash of the hardware model — with
+        ``graph.topo_hash`` it keys the serving cache: same graph
+        structure + same fleet means a cached placement replays."""
+        import hashlib
+        h = hashlib.sha256()
+        mem = self.mem_bytes if self.mem_bytes is not None else np.zeros(0)
+        for arr in (self.flops_per_sec, self.link_bw, self.link_latency,
+                    self.exec_overhead_vec, mem):
+            a = np.ascontiguousarray(np.asarray(arr, dtype=np.float64))
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
     def memory_ok(self, bytes_per_device: np.ndarray) -> bool:
         """Does a per-device residency profile fit?  Always True when the
         fleet has no modeled capacity."""

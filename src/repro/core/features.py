@@ -32,6 +32,39 @@ from .graph import DataflowGraph
 
 COMM_FACTOR_DEFAULT = 4.0
 
+# Static per-device fleet descriptors X_F (cross-graph serving, PR 6):
+# the dynamic features X_D describe the episode, not the hardware — on a
+# heterogeneous fleet every device looks identical at step 0, so a policy
+# pretrained across fleets cannot prefer the fast devices zero-shot.
+# X_F fixes that with fleet-normalized (scale-free) per-device columns:
+#   0. compute rate          flops_per_sec / max fleet rate
+#   1. launch overhead       exec_overhead / max fleet overhead
+#   2. memory capacity       mem_bytes / max fleet capacity (1 if unmodeled)
+#   3. mean outgoing link bw / max such mean over devices
+#   4. mean incoming link bw / max such mean over devices
+#   5. mean outgoing latency / max such mean over devices
+N_FLEET_FEATS = 6
+
+
+def compute_fleet_features(dev: DeviceModel) -> np.ndarray:
+    """Per-device static hardware descriptors — (n_dev, N_FLEET_FEATS),
+    normalized within the fleet so one policy reads any hardware."""
+    n = dev.n
+    off = ~np.eye(n, dtype=bool)
+    bw = np.where(np.isfinite(dev.link_bw), dev.link_bw, 0.0)
+    bw_out = np.where(off, bw, 0.0).sum(1) / max(n - 1, 1)
+    bw_in = np.where(off, bw, 0.0).sum(0) / max(n - 1, 1)
+    lat_out = np.where(off, dev.link_latency, 0.0).sum(1) / max(n - 1, 1)
+    mem = (dev.mem_bytes if dev.mem_bytes is not None
+           else np.ones(n))
+    cols = [dev.flops_per_sec, dev.exec_overhead_vec, mem,
+            bw_out, bw_in, lat_out]
+    out = np.empty((n, N_FLEET_FEATS))
+    for j, c in enumerate(cols):
+        c = np.asarray(c, dtype=np.float64)
+        out[:, j] = c / max(float(c.max()), 1e-30)
+    return out
+
 
 # ----------------------------------------------------------------- static
 @dataclasses.dataclass
@@ -146,6 +179,7 @@ class EpisodeState:
         # vertex, including inputs (they are vertices of G). Inputs cost 0.
         self._flops = g.flops_array()
         self._tt = {}
+        self.fleet_x = compute_fleet_features(dev)
 
     def _xfer(self, nbytes: float, src: int, dst: int) -> float:
         return self.dev.transfer_time(nbytes, src, dst)
@@ -158,7 +192,9 @@ class EpisodeState:
         return np.flatnonzero(self.candidate)
 
     def device_features(self, v: int) -> np.ndarray:
-        """X_D for target node v — (n_dev, 5), Appendix E.2."""
+        """[X_D || X_F] for target node v — (n_dev, 5 + N_FLEET_FEATS):
+        the Appendix-E.2 dynamic columns followed by the static fleet
+        descriptors (so PLC reads the hardware, not just the episode)."""
         g, dev = self.g, self.dev
         nd = dev.n
         feats = np.zeros((nd, 5))
@@ -180,7 +216,7 @@ class EpisodeState:
         out[:, 0] = feats[:, 0] / max(self._flops.sum(), 1e-9)
         out[:, 1] = feats[:, 1] / max(self._flops.sum(), 1e-9)
         out[:, 2:5] = feats[:, 2:5] / scale
-        return out
+        return np.concatenate([out, self.fleet_x], axis=1)
 
     def step(self, v: int, d: int) -> None:
         """Commit assignment of vertex v to device d; update estimators."""

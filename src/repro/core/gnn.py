@@ -17,15 +17,19 @@ from .nn import apply_mlp, init_mlp
 
 def init_gnn(key, d_in: int, d_hidden: int, n_layers: int = 2,
              d_edge: int = 1):
-    keys = jax.random.split(key, 2 * n_layers + 1)
+    # one split yields every layer key: embed + 3 per layer.  (The seed
+    # code drew `phi` from fold_in on the *parent* key that was also
+    # split for embed/psi — correlated draws — and left the last split
+    # key unused.)
+    keys = jax.random.split(key, 3 * n_layers + 1)
     params = {"embed": init_mlp(keys[0], [d_in, d_hidden]), "layers": []}
     for k in range(n_layers):
         params["layers"].append({
-            "psi_fwd": init_mlp(keys[2 * k + 1],
+            "psi_fwd": init_mlp(keys[3 * k + 1],
                                 [2 * d_hidden + d_edge, d_hidden, d_hidden]),
-            "psi_bwd": init_mlp(keys[2 * k + 2],
+            "psi_bwd": init_mlp(keys[3 * k + 2],
                                 [2 * d_hidden + d_edge, d_hidden, d_hidden]),
-            "phi": init_mlp(jax.random.fold_in(key, 1000 + k),
+            "phi": init_mlp(keys[3 * k + 3],
                             [3 * d_hidden, d_hidden, d_hidden]),
         })
     return params

@@ -206,6 +206,22 @@ class DataflowGraph:
                 f"meta_ops={len({v.meta_op for v in self.vertices if v.meta_op >= 0})})")
 
 
+def topo_hash(g: DataflowGraph) -> str:
+    """Structural fingerprint: kinds + exact costs + edges, labels
+    excluded (cosmetic relabeling must not change the hash).  This is the
+    golden-test fingerprint (tests/test_goldens.py) and the serving-cache
+    key (launch/place_server.py): two graphs with the same hash are
+    placement-equivalent, so a cached placement can be replayed."""
+    import hashlib
+    h = hashlib.sha256()
+    for v in g.vertices:
+        h.update(f"{v.kind}|{float(v.flops).hex()}|"
+                 f"{float(v.out_bytes).hex()}\n".encode())
+    for (s, d) in g.edges:
+        h.update(f"{s}>{d}\n".encode())
+    return h.hexdigest()
+
+
 def validate_assignment(graph: DataflowGraph, assignment: Sequence[int],
                         n_devices: int) -> None:
     a = np.asarray(assignment)

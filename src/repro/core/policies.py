@@ -23,11 +23,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .features import N_FLEET_FEATS
 from .gnn import apply_gnn, init_gnn, path_embedding
 from .nn import apply_mlp, init_mlp, leaky_relu
 
 N_STATIC_FEATS = 5      # Appendix E.1
 N_DEVICE_FEATS = 5      # Appendix E.2
+# PLC additionally reads the static fleet descriptors X_F
+# (features.compute_fleet_features), so ONE parameter set is valid — and
+# hardware-aware — for any graph x fleet (cross-graph zero-shot serving).
+N_PLC_DEV_FEATS = N_DEVICE_FEATS + N_FLEET_FEATS
 
 
 def init_policies(key, d_hidden: int = 64, d_z: int = 32, d_y: int = 32,
@@ -38,7 +43,7 @@ def init_policies(key, d_hidden: int = 64, d_z: int = 32, d_y: int = 32,
         "sel_z": init_mlp(ks[1], [N_STATIC_FEATS, d_z]),
         "sel_head": init_mlp(ks[2], [3 * d_hidden + d_z, d_hidden, 1]),
         "plc_z": init_mlp(ks[3], [N_STATIC_FEATS, d_z]),
-        "plc_y": init_mlp(ks[4], [N_DEVICE_FEATS, d_y]),
+        "plc_y": init_mlp(ks[4], [N_PLC_DEV_FEATS, d_y]),
         "plc_head1": init_mlp(ks[5], [2 * d_hidden + d_y + d_z, d_hidden]),
         "plc_head2": init_mlp(ks[6], [d_hidden, 1]),
     }
@@ -59,8 +64,9 @@ def episode_encodings(params, x, edges, edge_feat, b_path, t_path):
 
 
 def plc_logits(params, h_v, h_dev, x_dev, z_v):
-    """Per-step device logits.  h_v: (dh,), h_dev: (nd, dh) mean embedding of
-    placed nodes per device, x_dev: (nd, 5) dynamic features, z_v: (dz,)."""
+    """Per-step device logits.  h_v: (dh,), h_dev: (nd, dh) mean embedding
+    of placed nodes per device, x_dev: (nd, N_PLC_DEV_FEATS) dynamic +
+    static fleet features, z_v: (dz,)."""
     nd = h_dev.shape[0]
     y = apply_mlp(params["plc_y"], x_dev)                       # (nd, dy)
     hv = jnp.broadcast_to(h_v[None, :], (nd, h_v.shape[0]))

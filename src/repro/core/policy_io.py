@@ -84,3 +84,40 @@ def load_policy(ckpt_dir: str | pathlib.Path, trainer, step: int | None = None):
     if extra.get("best_assignment") is not None:
         trainer.best_assignment = np.asarray(extra["best_assignment"])
     return trainer
+
+
+# ------------------------------------------------- pretrained (cross-graph)
+def save_pretrained(ckpt_dir: str | pathlib.Path,
+                    pretrained: dict) -> pathlib.Path:
+    """Persist a ``training.pretrain()`` result (one graph-agnostic
+    parameter set + its architecture meta) for zero-shot serving."""
+    extra = {"pretrain_meta": pretrained["meta"],
+             "per_task": pretrained.get("per_task", {})}
+    return save_checkpoint(ckpt_dir, 0, pretrained["params"], extra=extra)
+
+
+def load_pretrained(ckpt_dir: str | pathlib.Path,
+                    step: int | None = None) -> dict:
+    """Load a pretrained policy WITHOUT needing a trainer: the manifest's
+    ``pretrain_meta`` records the policy hyper-shape (d_hidden, d_z, d_y,
+    gnn_layers), from which an init_policies template is rebuilt to
+    receive the leaves.  Returns the same dict shape ``pretrain`` emits."""
+    import json
+
+    import jax
+
+    from ..train.checkpoint import latest_step
+    from .policies import init_policies
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no pretrained checkpoint in {ckpt_dir}")
+    manifest = pathlib.Path(ckpt_dir) / f"step_{step:09d}" / "manifest.json"
+    meta = json.loads(manifest.read_text())["extra"]["pretrain_meta"]
+    template = init_policies(jax.random.PRNGKey(0),
+                             d_hidden=int(meta["d_hidden"]),
+                             d_z=int(meta.get("d_z", 32)),
+                             d_y=int(meta.get("d_y", 32)),
+                             gnn_layers=int(meta["gnn_layers"]))
+    params, extra = restore_checkpoint(ckpt_dir, step, template)
+    return {"params": params, "meta": extra["pretrain_meta"],
+            "per_task": extra.get("per_task", {})}

@@ -638,6 +638,127 @@ def transfer(trainer: DopplerTrainer, target_graph: DataflowGraph,
     return new
 
 
+# ---------------------------------------------------------------- pretrain
+@dataclasses.dataclass
+class PretrainTask:
+    """One (graph, fleet) cell of the cross-graph pretraining zoo."""
+    name: str
+    graph: DataflowGraph
+    dev: DeviceModel
+    noise_sigma: float = 0.0
+
+
+def zoo_pretrain_tasks(archs: Sequence[str] | None = None,
+                       fleets: Sequence[str] | None = None,
+                       holdout: Sequence[str] = (),
+                       seq: int = 32, n_synthetic: int = 2,
+                       seed: int = 0) -> list[PretrainTask]:
+    """The pretraining zoo: every (non-held-out) registry architecture's
+    block graph paired round-robin with a heterogeneous fleet, plus
+    synthetic layered/tiled graph augmentation (graphs/builder.py's
+    sharded decomposer at randomized grids, and random layered DAGs) so
+    the policy sees structure beyond the model zoo.  ``holdout``
+    architectures are excluded end to end — they are the zero-shot
+    evaluation set."""
+    from ..configs.registry import ARCH_IDS
+    from ..graphs.workloads import get_workload, synthetic_layered
+    from .devices import HETERO_FLEETS, get_device_model
+    fleets = tuple(fleets or HETERO_FLEETS)
+    archs = [a for a in (archs or ARCH_IDS) if a not in set(holdout)]
+    tasks = []
+    for i, arch in enumerate(archs):
+        fleet = fleets[i % len(fleets)]
+        tasks.append(PretrainTask(
+            f"{arch}|{fleet}", get_workload(f"model:{arch}", seq=seq),
+            get_device_model(fleet)))
+    rng = np.random.default_rng(seed)
+    for j in range(n_synthetic):
+        if j % 2 == 0:
+            g = synthetic_layered(int(rng.integers(4, 9)),
+                                  int(rng.integers(6, 13)),
+                                  seed=seed + 17 * j)
+        else:           # tiled: the sharded decomposer at a random grid
+            g = get_workload("ffnn", batch_log2=int(rng.integers(8, 11)),
+                             hidden_log2=int(rng.integers(8, 11)),
+                             grid=int(rng.integers(2, 4)))
+        fleet = fleets[(len(archs) + j) % len(fleets)]
+        tasks.append(PretrainTask(f"synth{j}|{g.name}|{fleet}", g,
+                                  get_device_model(fleet)))
+    return tasks
+
+
+def pretrain(tasks: Sequence[PretrainTask], seed: int = 0,
+             rounds: int = 4, batch_size: int = 8,
+             imitation_episodes: int = 2,
+             d_hidden: int = 64, d_z: int = 32, d_y: int = 32,
+             gnn_layers: int = 2,
+             lr0: float = 3e-3, lr1: float = 1e-5,
+             eps0: float = 0.2, eps1: float = 0.0,
+             entropy_weight: float = 1e-2, normalize_adv: bool = True,
+             sim_engine: str = "batched", log_every: int = 0) -> dict:
+    """Train ONE dual-policy parameter set across many graph x fleet
+    tasks (GDP/Placeto-style cross-graph generalization).
+
+    The GNN-featurized policy is dimensionally graph- and fleet-agnostic
+    (node embeddings + fleet descriptors, no per-graph parameter
+    shapes), so a single (params, opt_state) pair round-robins over the
+    tasks: per visit one task takes one batched REINFORCE update (after
+    ``imitation_episodes`` CP-imitation warm-start passes).  Each task
+    keeps its OWN reward statistics — makespans differ by orders of
+    magnitude across graphs, so advantages must normalize per task, not
+    against a pooled baseline.
+
+    Returns ``{"params", "meta", "per_task"}``; feed ``params`` to
+    :class:`~repro.launch.place_server.PlacementServer` (or
+    ``policy_io.save_pretrained``) for zero-shot serving."""
+    if not tasks:
+        raise ValueError("pretrain needs at least one task")
+    total = imitation_episodes + rounds * batch_size
+    trainers, engines = [], []
+    for i, t in enumerate(tasks):
+        tr = DopplerTrainer(t.graph, t.dev, seed=seed + i,
+                            d_hidden=d_hidden, gnn_layers=gnn_layers,
+                            lr0=lr0, lr1=lr1, eps0=eps0, eps1=eps1,
+                            entropy_weight=entropy_weight,
+                            normalize_adv=normalize_adv,
+                            total_episodes=max(total, 1))
+        tr.params = init_policies(jax.random.PRNGKey(seed),
+                                  d_hidden=d_hidden, d_z=d_z, d_y=d_y,
+                                  gnn_layers=gnn_layers)
+        tr.opt_state = adamw_init(tr.params)
+        trainers.append(tr)
+        engines.append(SimRewardEngine(
+            WCSimulator(t.graph, t.dev, choose="fifo",
+                        noise_sigma=t.noise_sigma),
+            sim_engine=sim_engine))
+    params, opt_state = trainers[0].params, trainers[0].opt_state
+
+    # Stage I warm start, round-robin so no task dominates the schedule
+    for ep in range(imitation_episodes):
+        for tr in trainers:
+            tr.params, tr.opt_state = params, opt_state
+            tr.stage1_imitation(1, seed=seed + ep)
+            params, opt_state = tr.params, tr.opt_state
+    # Stage II: one batched update per task per round on shared params
+    for rnd in range(rounds):
+        for t, tr, eng in zip(tasks, trainers, engines):
+            tr.params, tr.opt_state = params, opt_state
+            ts = tr._batched_rl_update(eng, batch_size, "pretrain")
+            params, opt_state = tr.params, tr.opt_state
+            if log_every and (rnd + 1) % log_every == 0:
+                print(f"[pretrain] round {rnd+1}/{rounds} {t.name}: "
+                      f"mean={ts.mean()*1e3:.2f}ms "
+                      f"best={tr.best_time*1e3:.2f}ms")
+    meta = {"d_hidden": d_hidden, "d_z": d_z, "d_y": d_y,
+            "gnn_layers": gnn_layers, "seed": seed, "rounds": rounds,
+            "batch_size": batch_size,
+            "imitation_episodes": imitation_episodes,
+            "tasks": [t.name for t in tasks]}
+    per_task = {t.name: {"best_time": float(tr.best_time)}
+                for t, tr in zip(tasks, trainers)}
+    return {"params": params, "meta": meta, "per_task": per_task}
+
+
 # ------------------------------------------------------------------ fleet
 class FleetTrainer:
     """Appendix I: at 1000+-node scale the dataflow graph of each *repeated*

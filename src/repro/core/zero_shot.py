@@ -1,0 +1,130 @@
+"""Zero-shot greedy placement: a pure-numpy forward pass of the dual
+policy for the serving hot path.
+
+``assign.rollout`` is the training engine — a jitted ``lax.scan`` whose
+first call on a new graph *shape* pays an XLA compile (seconds).  A
+placement server sees a new shape on every cache miss, so the serving
+path cannot afford that: this module re-implements the greedy episode
+(GNN encode once, then n steps of SEL-argmax + PLC-argmax over
+``EpisodeState`` dynamics) in plain float32 numpy.  No compilation, no
+dispatch overhead — a few hundred small matmuls, well under a second for
+zoo-scale graphs.
+
+The forward math is the same as ``policies.py`` (cross-checked against
+``episode_encodings`` / ``plc_logits`` in tests/test_serving.py); the
+episode dynamics are the reference ``features.EpisodeState`` that the
+jit scan is itself validated against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .devices import DeviceModel
+from .features import COMM_FACTOR_DEFAULT, EpisodeState, \
+    compute_static_features
+from .graph import DataflowGraph
+
+
+def to_numpy_params(params) -> dict:
+    """Pull a (possibly device-resident) param pytree back as float32
+    numpy — the server keeps this copy so serving never touches jax."""
+    import jax
+    return jax.tree_util.tree_map(
+        lambda x: np.asarray(x, dtype=np.float32), params)
+
+
+# ------------------------------------------------------------ nn forward
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _mlp(p, x):
+    layers = p["layers"]
+    for i, lp in enumerate(layers):
+        x = _linear(lp, x)
+        if i < len(layers) - 1:
+            x = np.maximum(x, 0.0)
+    return x
+
+
+def _leaky_relu(x, alpha=0.01):
+    return np.where(x >= 0, x, alpha * x)
+
+
+def _gnn(p, x, edges, edge_feat):
+    n = x.shape[0]
+    h = _mlp(p["embed"], x)
+    if edges.shape[0]:
+        src, dst = edges[:, 0], edges[:, 1]
+    else:
+        src = dst = np.zeros(0, dtype=np.int64)
+    for lp in p["layers"]:
+        hs, hd = h[src], h[dst]
+        msg_f = _mlp(lp["psi_fwd"], np.concatenate([hs, hd, edge_feat], -1))
+        msg_b = _mlp(lp["psi_bwd"], np.concatenate([hd, hs, edge_feat], -1))
+        agg_in = np.zeros_like(h)
+        agg_out = np.zeros_like(h)
+        np.add.at(agg_in, dst, msg_f)
+        np.add.at(agg_out, src, msg_b)
+        h = h + _mlp(lp["phi"], np.concatenate([h, agg_in, agg_out], -1))
+    return h
+
+
+def _path_embedding(h, path_idx):
+    mask = path_idx >= 0
+    gathered = h[np.where(mask, path_idx, 0)]
+    w = mask[..., None].astype(h.dtype)
+    return (gathered * w).sum(1) / np.maximum(w.sum(1), 1.0)
+
+
+def encode_graph(params, g: DataflowGraph,
+                 comm_factor: float = COMM_FACTOR_DEFAULT):
+    """Once-per-graph encodings: (H, sel_logits, z_plc) — the numpy twin
+    of ``policies.episode_encodings`` fed from raw graph features."""
+    sf = compute_static_features(g, comm_factor)
+    x = sf.x_norm.astype(np.float32)
+    edges = g.edge_array()
+    ef = (sf.edge_cost_norm[:, None] if g.m else
+          np.zeros((0, 1))).astype(np.float32)
+    H = _gnn(params["gnn"], x, edges, ef)
+    h_b = _path_embedding(H, sf.b_path)
+    h_t = _path_embedding(H, sf.t_path)
+    z_sel = _mlp(params["sel_z"], x)
+    sel_in = np.concatenate([H, h_b, h_t, z_sel], axis=-1)
+    sel_logits = _mlp(params["sel_head"], sel_in)[:, 0]
+    z_plc = _mlp(params["plc_z"], x)
+    return H, sel_logits, z_plc
+
+
+def plc_logits_np(params, h_v, h_dev, x_dev, z_v):
+    nd = h_dev.shape[0]
+    y = _mlp(params["plc_y"], x_dev.astype(np.float32))
+    hv = np.broadcast_to(h_v[None, :], (nd, h_v.shape[0]))
+    zv = np.broadcast_to(z_v[None, :], (nd, z_v.shape[0]))
+    inp = np.concatenate([hv, h_dev, y, zv], axis=-1)
+    return _mlp(params["plc_head2"],
+                _leaky_relu(_mlp(params["plc_head1"], inp)))[:, 0]
+
+
+# --------------------------------------------------------- greedy decode
+def greedy_place(params, g: DataflowGraph, dev: DeviceModel,
+                 comm_factor: float = COMM_FACTOR_DEFAULT) -> np.ndarray:
+    """One greedy episode of the pretrained dual policy on an UNSEEN
+    graph x fleet — the zero-shot serving rollout.  Params must be numpy
+    (see :func:`to_numpy_params`).  Returns the (n,) assignment."""
+    H, sel_logits, z_plc = encode_graph(params, g, comm_factor)
+    state = EpisodeState(g, dev, comm_factor)
+    nd = dev.n
+    dev_hsum = np.zeros((nd, H.shape[1]), dtype=np.float32)
+    dev_cnt = np.zeros(nd, dtype=np.float32)
+    for _ in range(g.n):
+        cand = state.candidates()
+        v = int(cand[np.argmax(sel_logits[cand])])
+        x_dev = state.device_features(v)
+        h_dev = dev_hsum / np.maximum(dev_cnt[:, None], 1.0)
+        logits_d = plc_logits_np(params, H[v], h_dev, x_dev, z_plc[v])
+        d = int(np.argmax(logits_d))
+        state.step(v, d)
+        dev_hsum[d] += H[v]
+        dev_cnt[d] += 1.0
+    return state.assigned.copy()

@@ -43,8 +43,8 @@ def main():
         batch = {"frames": jax.random.normal(
             key, (args.batch, args.prompt_len, cfg.d_model),
             jnp.bfloat16) * 0.02}
-        mk_tok = lambda t: {"frames": jax.random.normal(
-            jax.random.fold_in(key, 7), (args.batch, 1, cfg.d_model),
+        mk_tok = lambda tok, t: {"frames": jax.random.normal(
+            jax.random.fold_in(key, 7 + t), (args.batch, 1, cfg.d_model),
             jnp.bfloat16) * 0.02}
     else:
         batch = {"tokens": jax.random.randint(
@@ -53,14 +53,20 @@ def main():
             batch["patches"] = jax.random.normal(
                 key, (args.batch, cfg.n_patches, cfg.d_model),
                 jnp.bfloat16) * 0.02
-        mk_tok = lambda t: {"tokens": t}
+        mk_tok = lambda tok, t: {"tokens": tok}
 
     logits, state = prefill(params, batch, state)
     tok = jnp.argmax(logits, -1)[:, None]
     offset = cfg.n_patches if cfg.frontend == "vision_stub" else 0
+    # warm up the decode step OUTSIDE the timed loop — decode is pure, so
+    # discarding the warm-up result leaves `state` untouched while the
+    # XLA compile (hundreds of ms) stops being billed to ms/step
+    jax.block_until_ready(decode(params, mk_tok(tok, 0), state,
+                                 jnp.asarray(args.prompt_len + offset,
+                                             jnp.int32)))
     t0 = time.time()
     for i in range(args.gen - 1):
-        logits, state = decode(params, mk_tok(tok), state,
+        logits, state = decode(params, mk_tok(tok, i), state,
                                jnp.asarray(args.prompt_len + offset + i,
                                            jnp.int32))
         tok = jnp.argmax(logits, -1)[:, None]

@@ -11,13 +11,13 @@ Refresh after an INTENTIONAL change with:
 
     PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
 """
-import hashlib
 import json
 import pathlib
 
 import pytest
 
 from repro.configs.registry import ARCH_IDS
+from repro.core.graph import topo_hash
 from repro.graphs.workloads import get_workload
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
@@ -26,18 +26,6 @@ SEQ = 64                       # matches the zoo tests' trace shape
 # full-depth training-step graphs: one dense and one multi-block-pattern
 # architecture keep the tiling path honest without importing all ten
 FULL_ARCHS = ("olmo_1b", "zamba2_1p2b")
-
-
-def topo_hash(g) -> str:
-    """Structural fingerprint: kinds + exact costs + edges, labels
-    excluded (cosmetic relabeling must not invalidate goldens)."""
-    h = hashlib.sha256()
-    for v in g.vertices:
-        h.update(f"{v.kind}|{float(v.flops).hex()}|"
-                 f"{float(v.out_bytes).hex()}\n".encode())
-    for (s, d) in g.edges:
-        h.update(f"{s}>{d}\n".encode())
-    return h.hexdigest()
 
 
 def fingerprint(g) -> dict:

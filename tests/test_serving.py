@@ -1,0 +1,284 @@
+"""Zero-shot placement serving: numpy forward parity, fingerprint cache,
+pretrain -> zero-shot regression, and the satellite bugfix guards."""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import make_chain, make_diamond, random_dag
+
+from repro.core.devices import get_device_model, uniform_box
+from repro.core.features import (COMM_FACTOR_DEFAULT, N_FLEET_FEATS,
+                                 EpisodeState, compute_fleet_features)
+from repro.core.graph import topo_hash
+from repro.core.heuristics import critical_path_assignment
+from repro.core.simulator import WCSimulator
+from repro.core.zero_shot import (encode_graph, greedy_place,
+                                  plc_logits_np, to_numpy_params)
+from repro.launch.place_server import (PlaceRequest, PlacementServer,
+                                       PlaceResult)
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+
+
+@pytest.fixture(scope="module")
+def params():
+    import jax
+
+    from repro.core.policies import init_policies
+    return init_policies(jax.random.PRNGKey(3))
+
+
+# ------------------------------------------------------------ fleet feats
+def test_fleet_features_shape_and_normalization():
+    dev = get_device_model("mixed_gen4")
+    xf = compute_fleet_features(dev)
+    assert xf.shape == (dev.n, N_FLEET_FEATS)
+    assert np.isfinite(xf).all()
+    assert (xf >= 0).all() and (xf <= 1 + 1e-12).all()
+    # fleet-relative: every column's fastest/biggest device reads 1.0
+    assert np.allclose(xf.max(axis=0), 1.0)
+
+
+def test_device_features_include_fleet_block(diamond, dev4):
+    st = EpisodeState(diamond, dev4, COMM_FACTOR_DEFAULT)
+    v = int(st.candidates()[0])
+    x = st.device_features(v)
+    assert x.shape == (dev4.n, 5 + N_FLEET_FEATS)
+    # the static fleet block is identical across steps
+    st.step(v, 0)
+    v2 = int(st.candidates()[0])
+    np.testing.assert_array_equal(x[:, 5:],
+                                  st.device_features(v2)[:, 5:])
+
+
+# ----------------------------------------------------------- fingerprints
+def test_topo_hash_ignores_labels_tracks_costs():
+    g1, g2 = make_chain(5), make_chain(5)
+    for v in g2.vertices:
+        v.label = f"renamed_{v.vid}"
+    assert topo_hash(g1) == topo_hash(g2)
+    g3 = make_chain(5, flops=2e9)
+    assert topo_hash(g1) != topo_hash(g3)
+
+
+def test_device_fingerprint_distinguishes_fleets():
+    fps = {get_device_model(n).fingerprint()
+           for n in ("mixed_gen4", "two_pod_2x2", "straggler8")}
+    assert len(fps) == 3
+    assert get_device_model("mixed_gen4").fingerprint() == \
+        get_device_model("mixed_gen4").fingerprint()
+
+
+# -------------------------------------------------------- numpy == jax
+def test_numpy_encodings_match_jax(params, diamond, dev4):
+    import jax.numpy as jnp
+
+    from repro.core.assign import build_graph_data
+    from repro.core.policies import episode_encodings, plc_logits
+    npp = to_numpy_params(params)
+    gd = build_graph_data(diamond, dev4)
+    Hj, selj, zj = episode_encodings(params, gd.x, gd.edges, gd.edge_feat,
+                                     gd.b_path, gd.t_path)
+    Hn, seln, zn = encode_graph(npp, diamond)
+    np.testing.assert_allclose(Hn, np.asarray(Hj), atol=1e-5)
+    np.testing.assert_allclose(seln, np.asarray(selj), atol=1e-5)
+    np.testing.assert_allclose(zn, np.asarray(zj), atol=1e-5)
+
+    st = EpisodeState(diamond, dev4, COMM_FACTOR_DEFAULT)
+    v = int(st.candidates()[0])
+    x_dev = st.device_features(v)
+    h_dev = np.zeros((dev4.n, Hn.shape[1]), np.float32)
+    lj = plc_logits(params, Hj[v], jnp.asarray(h_dev),
+                    jnp.asarray(x_dev, jnp.float32), zj[v])
+    ln = plc_logits_np(npp, Hn[v], h_dev, x_dev, zn[v])
+    np.testing.assert_allclose(ln, np.asarray(lj), atol=1e-5)
+
+
+def test_greedy_place_matches_jit_greedy_rollout(params, diamond, dev4):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.assign import build_graph_data, rollout
+    a_np = greedy_place(to_numpy_params(params), diamond, dev4)
+    gd = build_graph_data(diamond, dev4)
+    out = rollout(params, gd, jax.random.PRNGKey(0), jnp.float32(0.0),
+                  jnp.zeros((diamond.n, 2), jnp.int32), jnp.array(False),
+                  greedy=True)
+    np.testing.assert_array_equal(a_np, np.asarray(out["assignment"]))
+
+
+def test_greedy_place_is_valid_on_hetero_fleet(params):
+    g = random_dag(np.random.default_rng(0), 24)
+    dev = get_device_model("straggler8")
+    a = greedy_place(to_numpy_params(params), g, dev)
+    assert a.shape == (g.n,)
+    assert (a >= 0).all() and (a < dev.n).all()
+
+
+# --------------------------------------------------------------- server
+def test_server_miss_then_hit_and_cp_bound(params, diamond, dev4):
+    srv = PlacementServer(params)
+    r1 = srv.place(diamond, dev4)
+    assert isinstance(r1, PlaceResult) and not r1.cache_hit
+    r2 = srv.place(diamond, dev4)
+    assert r2.cache_hit
+    np.testing.assert_array_equal(r1.assignment, r2.assignment)
+    assert srv.stats() == {"hits": 1, "misses": 1, "cached": 1}
+    # CP is in the candidate pool, so served <= CP by construction
+    sim = WCSimulator(diamond, dev4, choose="fifo", noise_sigma=0.0)
+    cp = min(sim.run(critical_path_assignment(diamond, dev4, seed=s)
+                     ).makespan for s in range(2))
+    assert r1.makespan <= cp * (1 + 1e-9)
+
+
+def test_server_cache_keys_and_lru_eviction(params, dev4):
+    srv = PlacementServer(params, cache_size=1)
+    g1, g2 = make_chain(4), make_chain(6)
+    srv.place(g1, dev4)
+    srv.place(g2, dev4)            # evicts g1 (capacity 1)
+    assert not srv.place(g1, dev4).cache_hit
+    # same topo-hash but different fleet is a different key
+    srv2 = PlacementServer(params)
+    srv2.place(g1, dev4)
+    assert not srv2.place(g1, uniform_box(2)).cache_hit
+
+
+def test_server_place_batch(params, dev4):
+    srv = PlacementServer(params)
+    g = make_diamond(4)
+    out = srv.place_batch([(g, dev4), PlaceRequest(g, dev4)])
+    assert [r.cache_hit for r in out] == [False, True]
+
+
+# --------------------------------------- pretrain -> zero-shot regression
+@pytest.fixture(scope="module")
+def micro_pretrained():
+    from repro.core.training import PretrainTask, pretrain
+    tasks = [
+        PretrainTask("chain|u4", make_chain(5), uniform_box(4)),
+        PretrainTask("diamond|mixed",
+                     make_diamond(4), get_device_model("mixed_gen4")),
+    ]
+    return pretrain(tasks, rounds=1, batch_size=2, imitation_episodes=1,
+                    d_hidden=16, d_z=8, d_y=8)
+
+
+def test_pretrain_returns_shared_params_and_stats(micro_pretrained):
+    pre = micro_pretrained
+    assert set(pre) == {"params", "meta", "per_task"}
+    assert pre["meta"]["tasks"] == ["chain|u4", "diamond|mixed"]
+    assert all(np.isfinite(v["best_time"]) and v["best_time"] > 0
+               for v in pre["per_task"].values())
+
+
+def test_pretrained_zero_shot_bounded_vs_cp_on_held_out(micro_pretrained):
+    """The serving acceptance gate in miniature: on graphs x fleets the
+    pretraining zoo NEVER saw, the served placement is at or below the
+    CP heuristic's makespan (CP rides in the candidate pool)."""
+    srv = PlacementServer(micro_pretrained["params"],
+                          meta=micro_pretrained["meta"])
+    held_out = [(random_dag(np.random.default_rng(7), 20),
+                 get_device_model("two_pod_2x2")),
+                (make_diamond(6), get_device_model("straggler8"))]
+    for g, dev in held_out:
+        r = srv.place(g, dev)
+        sim = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
+        cp = min(sim.run(critical_path_assignment(g, dev, seed=s)
+                         ).makespan for s in range(2))
+        assert r.makespan <= cp * (1 + 1e-9)
+        assert sim.run(r.assignment).makespan == pytest.approx(r.makespan)
+
+
+def test_save_load_pretrained_roundtrip(micro_pretrained, tmp_path,
+                                        diamond, dev4):
+    import jax
+
+    from repro.core.policy_io import load_pretrained, save_pretrained
+    save_pretrained(tmp_path, micro_pretrained)
+    loaded = load_pretrained(tmp_path)
+    assert loaded["meta"] == micro_pretrained["meta"]
+    for a, b in zip(jax.tree_util.tree_leaves(loaded["params"]),
+                    jax.tree_util.tree_leaves(micro_pretrained["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    # a server over the reloaded params serves the same placement
+    r0 = PlacementServer(micro_pretrained["params"]).place(diamond, dev4)
+    r1 = PlacementServer(loaded["params"]).place(diamond, dev4)
+    np.testing.assert_array_equal(r0.assignment, r1.assignment)
+
+
+def test_zoo_pretrain_tasks_respects_holdout():
+    from repro.core.training import zoo_pretrain_tasks
+    tasks = zoo_pretrain_tasks(archs=("gemma_2b", "olmo_1b"),
+                               holdout=("olmo_1b",), n_synthetic=2)
+    names = [t.name for t in tasks]
+    assert not any("olmo_1b" in n for n in names)
+    assert sum(n.startswith("synth") for n in names) == 2
+
+
+# ----------------------------------------------------- satellite guards
+def test_transfer_pcts_fixed_class_list():
+    sys.path.insert(0, str(BENCH_DIR))
+    try:
+        from table4_transfer import TRANSFER_CLASSES, transfer_pcts
+    finally:
+        sys.path.remove(str(BENCH_DIR))
+    # a counts dict missing classes (the seed-code KeyError) reads 0
+    pct = transfer_pcts({"same_device": 3})
+    assert set(pct) == set(TRANSFER_CLASSES)
+    assert pct["same_device"] == 100.0
+    assert pct["same_group"] == pct["across_groups"] == 0.0
+    assert sum(transfer_pcts({"same_device": 1, "same_group": 1,
+                              "across_groups": 2}).values()) \
+        == pytest.approx(100.0)
+    assert transfer_pcts({})["same_device"] == 0.0   # no div-by-zero
+
+
+def test_transfer_graph_smoke_reduced_budget():
+    """Table-4 protocol in miniature: train tiny on a chain, transfer the
+    params to a diamond, fine-tune a few episodes, and verify the
+    transferred trainer produces valid greedy placements + App.-J
+    locality accounting that sums to 100%."""
+    from repro.core.training import DopplerTrainer, transfer
+    sys.path.insert(0, str(BENCH_DIR))
+    try:
+        from table4_transfer import transfer_pcts
+    finally:
+        sys.path.remove(str(BENCH_DIR))
+    src_g, dev = make_chain(5), uniform_box(4)
+    src = DopplerTrainer(src_g, dev, seed=0, total_episodes=8,
+                         d_hidden=16, gnn_layers=1)
+    src.stage1_imitation(1)
+    src.stage2_sim_batched(1, WCSimulator(src_g, dev, noise_sigma=0.0),
+                           batch_size=2)
+    tgt_g = make_diamond(4)
+    tr = transfer(src, tgt_g, dev, seed=1, total_episodes=8,
+                  d_hidden=16, gnn_layers=1)
+    sim = WCSimulator(tgt_g, dev, noise_sigma=0.0,
+                      group_of=[0, 0, 1, 1])
+    tr.stage2_sim_batched(1, sim, batch_size=2)
+    a = tr.greedy_assignment()
+    assert a.shape == (tgt_g.n,) and (a >= 0).all() and (a < dev.n).all()
+    res = sim.run(a)
+    assert sum(transfer_pcts(res.transfer_class_counts).values()) \
+        == pytest.approx(100.0)
+
+
+def test_init_gnn_no_duplicate_leaves():
+    """RNG hygiene: every init_gnn weight matrix must come from its OWN
+    split key — the seed code drew all phi layers via fold_in on the same
+    parent, producing correlated (duplicate) draws."""
+    import jax
+
+    from repro.core.gnn import init_gnn
+    params = init_gnn(jax.random.PRNGKey(0), d_in=5, d_hidden=8,
+                      n_layers=3, d_edge=1)
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)
+              if np.asarray(x).size > 1]        # skip scalar-ish biases
+    weights = [w for w in leaves if w.ndim == 2]
+    for i in range(len(weights)):
+        for j in range(i + 1, len(weights)):
+            if weights[i].shape == weights[j].shape:
+                assert not np.array_equal(weights[i], weights[j]), \
+                    f"duplicate init draw between leaves {i} and {j}"
