@@ -7,8 +7,12 @@ train_fused.py), in updates/sec at batch=32.
 Rows (per workload: 512-vertex synthetic layered + the paper's
 llama layer):
 
-    train_<tag>_batched, us_per_update, upd_per_sec
-    train_<tag>_fused,   us_per_update, upd_per_sec + speedup + devices
+    train_<tag>_batched,    us_per_update, upd_per_sec
+    train_<tag>_fused,      us_per_update, upd_per_sec + speedup + devices
+    train_<tag>_fused_b256, us_per_update, upd_per_sec + eps_per_sec
+                            (fused path only — the Pallas-oracle scaling
+                            regime; the host-reward path has no batch-256
+                            story to tell)
 
 Protocol: both trainers run the canonical noise-free fifo Stage-II
 configuration (the zoo_sweep setting).  Timing alternates R rounds of
@@ -102,14 +106,36 @@ def bench_graph(tag: str, graph, dev, *, check_speedup: float | None = None):
     return speedup
 
 
+def bench_fused_large_batch(tag: str, graph, dev, *, batch: int = 256):
+    """Fused-path throughput at Stage-II scale-out batch sizes."""
+    n_devices = jax.local_device_count()
+    upd = budget(3, 8)
+    tr = DopplerTrainer(graph, dev, seed=0, total_episodes=100_000)
+    tr.stage2_fused(upd, batch_size=batch, updates_per_dispatch=upd,
+                    n_devices=n_devices)            # compile
+    ts = []
+    for _ in range(ROUNDS):
+        t0 = time.perf_counter()
+        tr.stage2_fused(upd, batch_size=batch, updates_per_dispatch=upd,
+                        n_devices=n_devices)
+        ts.append((time.perf_counter() - t0) / upd)
+    med = sorted(ts)[len(ts) // 2]
+    emit(f"train_{tag}_fused_b{batch}", med * 1e6,
+         f"upd_per_sec={1.0 / med:.2f} batch={batch} "
+         f"eps_per_sec={batch / med:.1f} devices={n_devices}")
+
+
 def main() -> None:
     dev = p100_box()
     g512 = synthetic_layered(32, 16)
     _check_fused_matches_reference(g512, dev)
     bench_graph("512v", g512, dev, check_speedup=3.0)
     bench_graph("llama_layer", llama_layer(), dev)
+    bench_fused_large_batch("512v", g512, dev, batch=256)
     if FULL:
         bench_graph("1024v", synthetic_layered(64, 16), dev)
+        bench_fused_large_batch("1024v", synthetic_layered(64, 16), dev,
+                                batch=1024)
 
 
 if __name__ == "__main__":

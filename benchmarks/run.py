@@ -22,7 +22,12 @@ BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(BENCH_DIR)
 
 # (tag, module, extra env) — env is applied before the subprocess starts,
-# i.e. before jax initializes in it.
+# i.e. before jax initializes in it.  XLA_FLAGS entries are *merged* with
+# (appended to) any user-set value rather than clobbering it, and
+# JAX_PLATFORMS / backend selectors pass through untouched, so
+# `JAX_PLATFORMS=cpu python -m benchmarks.run train` benches the backend
+# you asked for — and BENCH_<tag>.json records which backend actually
+# resolved in the child.
 MODULES = [
     ("sim", "bench_simulator", {}),
     ("train", "bench_training",
@@ -44,6 +49,20 @@ MODULES = [
 ]
 
 ROW_RE = re.compile(r"^([A-Za-z0-9_.:/\-]+),(-?[0-9.eE+\-]+),(.*)$")
+BACKEND_RE = re.compile(r"^# resolved_backend=(\S+)")
+
+
+def merge_env(base: dict, extra: dict) -> dict:
+    """Child env = parent env + per-tag extras.  XLA_FLAGS is additive
+    (the tag's flags append to the user's, which win on conflict since
+    XLA takes the last occurrence); everything else the tag sets wins."""
+    env = {**base}
+    for k, v in extra.items():
+        if k == "XLA_FLAGS" and base.get(k):
+            env[k] = f"{v} {base[k]}"
+        else:
+            env[k] = v
+    return env
 
 
 def parse_derived(text: str) -> dict:
@@ -68,22 +87,32 @@ def parse_derived(text: str) -> dict:
 
 
 def run_module(tag: str, mod_name: str, env_extra: dict
-               ) -> tuple[bool, list[dict]]:
-    """Run one benchmark module in a subprocess; return (ok, rows)."""
-    env = {**os.environ, **env_extra}
+               ) -> tuple[bool, list[dict], str | None]:
+    """Run one benchmark module in a subprocess; return
+    (ok, rows, resolved_backend)."""
+    env = merge_env(dict(os.environ), env_extra)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(ROOT, "src"), BENCH_DIR,
          env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    # probe the backend that actually resolved AFTER main() ran, when jax
+    # is guaranteed initialized (modules may set XLA flags at import)
     code = (f"import sys; sys.path.insert(0, {BENCH_DIR!r}); "
             f"sys.path.insert(0, {ROOT!r}); "
-            f"import {mod_name}; {mod_name}.main()")
+            f"import {mod_name}; {mod_name}.main(); "
+            f"import jax; print('# resolved_backend=' "
+            f"+ jax.default_backend(), flush=True)")
     proc = subprocess.Popen([sys.executable, "-c", code], env=env,
                             stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT, text=True)
     rows = []
+    backend = None
     assert proc.stdout is not None
     for line in proc.stdout:
         print(line, end="", flush=True)
+        b = BACKEND_RE.match(line.strip())
+        if b:
+            backend = b.group(1)
+            continue
         m = ROW_RE.match(line.strip())
         if m:
             try:
@@ -95,15 +124,18 @@ def run_module(tag: str, mod_name: str, env_extra: dict
                          "derived": parse_derived(m.group(3)),
                          "derived_raw": m.group(3)})
     proc.wait()
-    return proc.returncode == 0, rows
+    return proc.returncode == 0, rows, backend
 
 
-def write_json(tag: str, rows: list[dict], elapsed: float) -> str:
+def write_json(tag: str, rows: list[dict], elapsed: float,
+               backend: str | None) -> str:
     out_dir = os.environ.get("REPRO_BENCH_DIR", os.getcwd())
     path = os.path.join(out_dir, f"BENCH_{tag}.json")
     with open(path, "w") as f:
         json.dump({"tag": tag, "elapsed_sec": round(elapsed, 1),
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "backend": backend,
+                   "jax_platforms": os.environ.get("JAX_PLATFORMS"),
                    "rows": rows}, f, indent=1)
     return path
 
@@ -116,13 +148,13 @@ def main() -> None:
             continue
         t0 = time.time()
         print(f"# === {tag} ({mod_name}) ===", flush=True)
-        ok, rows = run_module(tag, mod_name, env_extra)
+        ok, rows, backend = run_module(tag, mod_name, env_extra)
         elapsed = time.time() - t0
         if not ok:
             failures.append(tag)
             print(f"# {tag} FAILED after {elapsed:.0f}s", flush=True)
             continue
-        path = write_json(tag, rows, elapsed)
+        path = write_json(tag, rows, elapsed, backend)
         print(f"# {tag} done in {elapsed:.0f}s -> {path}", flush=True)
     if failures:
         print(f"# FAILURES: {failures}")

@@ -158,10 +158,11 @@ def _etf_update(gd: GraphData, v, d, ready_d, state):
 
 
 # ---------------------------------------------------------------- rollout
-@partial(jax.jit, static_argnames=("greedy", "sel_mode", "plc_mode"))
+@partial(jax.jit, static_argnames=("greedy", "sel_mode", "plc_mode",
+                                   "encoder_backend"))
 def rollout(params, gd: GraphData, key, eps, forced_actions, use_forced,
             greedy: bool = False, sel_mode: str = "learned",
-            plc_mode: str = "learned"):
+            plc_mode: str = "learned", encoder_backend: str = "xla"):
     """Run one ASSIGN episode.
 
     Returns dict with: actions (n,2), sel_logp (n,), plc_logp (n,),
@@ -173,7 +174,8 @@ def rollout(params, gd: GraphData, key, eps, forced_actions, use_forced,
     replaces PLC with earliest-task-finish placement (DOPPLER-SEL)."""
     n, nd = gd.n, gd.nd
     H, sel_logits, z_plc = episode_encodings(
-        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
     dh = H.shape[1]
 
     placed = jnp.zeros(n, dtype=bool)
@@ -266,9 +268,11 @@ def rollout_py(params, g: DataflowGraph, dev: DeviceModel, gd: GraphData,
 
 
 # ------------------------------------------------------- batched rollout
-@partial(jax.jit, static_argnames=("sel_mode", "plc_mode"))
+@partial(jax.jit, static_argnames=("sel_mode", "plc_mode",
+                                   "encoder_backend"))
 def rollout_batch(params, gd: GraphData, keys, eps,
-                  sel_mode: str = "learned", plc_mode: str = "learned"):
+                  sel_mode: str = "learned", plc_mode: str = "learned",
+                  encoder_backend: str = "xla"):
     """Population sampling: K independent episodes in one vmapped call.
     keys: (K, 2) PRNG keys.  Returns the rollout dict with a leading K
     axis — one XLA dispatch for the whole population (~K x the episode
@@ -277,6 +281,7 @@ def rollout_batch(params, gd: GraphData, keys, eps,
 
     def one(key):
         return rollout(params, gd, key, eps, dummy, jnp.array(False),
-                       greedy=False, sel_mode=sel_mode, plc_mode=plc_mode)
+                       greedy=False, sel_mode=sel_mode, plc_mode=plc_mode,
+                       encoder_backend=encoder_backend)
 
     return jax.vmap(one)(keys)

@@ -124,17 +124,26 @@ class SimRewardEngine(RewardEngine):
 
 class JaxOracleEngine(RewardEngine):
     """The device-resident JAX WC oracle (sim_jax.py): noise-free 'fifo'
-    makespans, one fused vmapped dispatch per batch."""
+    makespans, one fused vmapped dispatch per batch.
+
+    ``backend`` ("xla" | "pallas") selects the batched oracle path; the
+    Pallas path routes the per-trip running-table work through the fused
+    kernels.wc_oracle step.  Both are decision-exact twins of the serial
+    engine, so the engine name records which one scored the rewards."""
 
     batched = True
     deterministic = True
-    name = "jax_oracle"
 
-    def __init__(self, graph=None, devices=None, jax_engine=None):
+    def __init__(self, graph=None, devices=None, jax_engine=None,
+                 backend: str = "xla", interpret: bool | None = None):
         if jax_engine is None:
             from .sim_jax import JaxWCEngine
-            jax_engine = JaxWCEngine(graph, devices)
+            jax_engine = JaxWCEngine(graph, devices, backend=backend,
+                                     interpret=interpret)
         self.engine = jax_engine
+        self.name = (f"jax_oracle[{jax_engine.backend}]"
+                     if getattr(jax_engine, "backend", "xla") != "xla"
+                     else "jax_oracle")
 
     def exec_times(self, assignments, episode: int = 0) -> np.ndarray:
         A = np.asarray(assignments)

@@ -90,54 +90,71 @@ def compute_static_features(g: DataflowGraph,
                             ) -> StaticFeatures:
     n = g.n
     flops = g.flops_array()
+    out_bytes = g.out_bytes_array()
+    E = g.edge_array().astype(np.int64)
+    src, dst = E[:, 0], E[:, 1]
+
+    edge_cost = out_bytes[src] * comm_factor
     comm_in = np.zeros(n)
     comm_out = np.zeros(n)
-    for (s, d) in g.edges:
-        c = g.vertices[s].out_bytes * comm_factor
-        comm_in[d] += c
-        comm_out[s] += c
+    # np.add.at accumulates in index order == edge order (matches the
+    # per-edge loop it replaced bit-for-bit).
+    np.add.at(comm_in, dst, edge_cost)
+    np.add.at(comm_out, src, edge_cost)
 
-    edge_cost = np.array([g.vertices[s].out_bytes * comm_factor
-                          for (s, d) in g.edges], dtype=np.float64)
+    # CSR adjacency.  freeze() appends to succs/preds in deduped-edge
+    # order, so a *stable* sort over g.edges reproduces the adjacency
+    # order exactly — ties in the DP below break identically.
+    def _csr(keys: np.ndarray, vals: np.ndarray):
+        order = np.argsort(keys, kind="stable")
+        indptr = np.concatenate([[0], np.cumsum(np.bincount(keys, minlength=n))])
+        return indptr, vals[order]
+
+    s_ptr, s_adj = _csr(src, dst)     # succs
+    p_ptr, p_adj = _csr(dst, src)     # preds
 
     # cost of traversing vertex v then edge (v,w):
     # comp(v) + comm(v->w);  longest-path DP both directions.
     # t-level: v -> exit (forwards);  b-level: v -> entry (backwards).
+    # np.argmax takes the first of equal maxima — same winner as the
+    # strict-> scalar scan it replaced.
     t_level = np.zeros(n)
     t_next = np.full(n, -1, dtype=np.int64)      # successor on the t-path
     for v in reversed(g.topo_order):
-        best, arg = 0.0, -1
-        for w in g.succs[v]:
-            cand = g.vertices[v].out_bytes * comm_factor + t_level[w]
-            if cand > best:
-                best, arg = cand, w
+        sw = s_adj[s_ptr[v]:s_ptr[v + 1]]
+        best = 0.0
+        if sw.size:
+            cand = out_bytes[v] * comm_factor + t_level[sw]
+            j = int(np.argmax(cand))
+            if cand[j] > 0.0:
+                best = cand[j]
+                t_next[v] = sw[j]
         t_level[v] = flops[v] + best
-        t_next[v] = arg
 
     b_level = np.zeros(n)
     b_next = np.full(n, -1, dtype=np.int64)      # predecessor on the b-path
     for v in g.topo_order:
-        best, arg = 0.0, -1
-        for p in g.preds[v]:
-            cand = g.vertices[p].out_bytes * comm_factor + b_level[p]
-            if cand > best:
-                best, arg = cand, p
+        pw = p_adj[p_ptr[v]:p_ptr[v + 1]]
+        best = 0.0
+        if pw.size:
+            cand = out_bytes[pw] * comm_factor + b_level[pw]
+            j = int(np.argmax(cand))
+            if cand[j] > 0.0:
+                best = cand[j]
+                b_next[v] = pw[j]
         b_level[v] = flops[v] + best
-        b_next[v] = arg
 
     def walk(nxt: np.ndarray) -> np.ndarray:
-        paths = []
-        for v in range(n):
-            path, u = [v], v
-            while nxt[u] >= 0:
-                u = nxt[u]
-                path.append(u)
-            paths.append(path)
-        L = max(len(p) for p in paths)
-        out = np.full((n, L), -1, dtype=np.int64)
-        for v, p in enumerate(paths):
-            out[v, :len(p)] = p
-        return out
+        # column-wise pointer chase: one vectorized hop per path depth
+        # instead of one python loop per vertex.
+        cur = np.arange(n, dtype=np.int64)
+        cols = [cur]
+        step = nxt[cur]
+        while (step >= 0).any():
+            cur = step
+            cols.append(cur)
+            step = np.where(cur >= 0, nxt[np.maximum(cur, 0)], -1)
+        return np.stack(cols, axis=1)
 
     x = np.stack([flops, comm_in, comm_out, t_level, b_level], axis=1)
     return StaticFeatures(x=x, x_norm=_normalize(x),

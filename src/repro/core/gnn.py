@@ -35,10 +35,28 @@ def init_gnn(key, d_in: int, d_hidden: int, n_layers: int = 2,
     return params
 
 
-def apply_gnn(params, x, edges, edge_feat):
+ENCODER_BACKENDS = ("xla", "pallas")
+
+
+def apply_gnn(params, x, edges, edge_feat, backend: str = "xla"):
     """x: (n, d_in) node features; edges: (m, 2) int (src, dst);
-    edge_feat: (m, d_edge). Returns H: (n, d_hidden)."""
+    edge_feat: (m, d_edge). Returns H: (n, d_hidden).
+
+    ``backend`` selects the (+) aggregation: "xla" is
+    ``jax.ops.segment_sum``; "pallas" routes both directions through the
+    blocked MXU-style kernels.gnn_mp kernel (interpret-mode fallback off
+    TPU), matching XLA to float tolerance (bit-for-bit on graphs whose
+    in/out-degree is ≤ 1 — single-element sums are order-free)."""
     n = x.shape[0]
+    if backend == "pallas":
+        from ..kernels.gnn_mp.ops import segment_sum_mp
+        agg = lambda msg, idx: segment_sum_mp(msg, idx, n=n)  # noqa: E731
+    elif backend == "xla":
+        agg = lambda msg, idx: jax.ops.segment_sum(           # noqa: E731
+            msg, idx, num_segments=n)
+    else:
+        raise ValueError(f"unknown encoder backend {backend!r}; "
+                         f"expected one of {ENCODER_BACKENDS}")
     h = apply_mlp(params["embed"], x)
     if edges.shape[0] == 0:
         src = dst = jnp.zeros((0,), dtype=jnp.int32)
@@ -48,8 +66,8 @@ def apply_gnn(params, x, edges, edge_feat):
         hs, hd = h[src], h[dst]
         msg_f = apply_mlp(lp["psi_fwd"], jnp.concatenate([hs, hd, edge_feat], -1))
         msg_b = apply_mlp(lp["psi_bwd"], jnp.concatenate([hd, hs, edge_feat], -1))
-        agg_in = jax.ops.segment_sum(msg_f, dst, num_segments=n)
-        agg_out = jax.ops.segment_sum(msg_b, src, num_segments=n)
+        agg_in = agg(msg_f, dst)
+        agg_out = agg(msg_b, src)
         h_new = apply_mlp(lp["phi"], jnp.concatenate([h, agg_in, agg_out], -1))
         h = h + h_new                        # residual for depth stability
     return h

@@ -49,11 +49,13 @@ def init_policies(key, d_hidden: int = 64, d_z: int = 32, d_y: int = 32,
     }
 
 
-def episode_encodings(params, x, edges, edge_feat, b_path, t_path):
+def episode_encodings(params, x, edges, edge_feat, b_path, t_path,
+                      backend: str = "xla"):
     """Once-per-episode encodings: GNN pass, path embeddings, static SEL
     logits (SEL's inputs are all static, so its logits are too — only the
-    candidate mask evolves during the episode)."""
-    H = apply_gnn(params["gnn"], x, edges, edge_feat)
+    candidate mask evolves during the episode).  ``backend`` selects the
+    GNN aggregation path (gnn.apply_gnn)."""
+    H = apply_gnn(params["gnn"], x, edges, edge_feat, backend=backend)
     h_b = path_embedding(H, b_path)
     h_t = path_embedding(H, t_path)
     z_sel = apply_mlp(params["sel_z"], x)

@@ -60,9 +60,12 @@ import numpy as np
 
 from .devices import DeviceModel
 from .graph import DataflowGraph
+from ..kernels.wc_oracle.ops import wc_step
 
 F32_INF = jnp.float32(np.inf)
 I32_BIG = jnp.int32(2**31 - 1)
+
+ORACLE_BACKENDS = ("xla", "pallas")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -192,31 +195,11 @@ def _derive_tasks(sg: SimGraph, A):
     return av, is_canon, req, edur, xdur, res_x
 
 
-@partial(jax.jit, static_argnames=())
-def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Noise-free 'fifo' WC makespan of one assignment.
-
-    Returns ``(makespan, ok)``; ``ok`` is False when the episode deadlocks
-    (the host wrapper raises, matching the numpy engines).
-
-    Performance shape: each resource's FIFO queue is an intrusive linked
-    list (head/tail pointers plus a per-task ``next``), the running tasks
-    live in a compact (R, 6) per-resource table, and every per-trip update
-    is a gather or a ≤C-index scatter — the work-conserving start pass
-    only examines the carried *candidate list* (the resource freed by the
-    last completion plus the ≤C whose queue gained a task; every other
-    resource is busy or free-and-empty, an invariant the pass maintains).
-    The trip loop is a ``while_loop`` that exits when the heap drains, so
-    an episode costs exactly its own completion count.  Queue keys are
-    exact-integer float32 (SimGraph.build guarantees keys < 2**24).
-    """
-    n, nd, C, mm = sg.n, sg.nd, sg.C, sg.esrc.shape[0]
-    av, is_canon, req, edur, xdur, res_x = _derive_tasks(sg, assignment)
-    N = n + mm                      # unified task space: execs then xfers
-    R = nd + nd * nd                # devices then directed channels
-    cpos = jnp.arange(C, dtype=jnp.int32)
-    dur = jnp.concatenate([edur, xdur])
-    res_of = jnp.concatenate([av, res_x])
+def _init_episode(sg: SimGraph, av):
+    """Initial trip-loop state (tkn, hdtl, run, need, cand) for one episode."""
+    n, nd, C = sg.n, sg.nd, sg.C
+    mm = sg.esrc.shape[0]
+    R = nd + nd * nd
     F_BIG = jnp.float32(I32_BIG)
 
     # ---- per-task queue state: tkn[:, 0] = insertion key (exact f32
@@ -258,47 +241,168 @@ def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
     K = max(nd, C + 1)
     cand = jnp.full(K, R, jnp.int32).at[:nd].set(
         jnp.arange(nd, dtype=jnp.int32))
+    return tkn, hdtl, run, need, cand
+
+
+def _start_pass(sg: SimGraph, dur, tkn, hdtl, run, cand, t, ftrip):
+    """Work-conserving start pass over the candidate resources: a free
+    resource starts its queue head (duplicate candidates are idempotent —
+    same head, same row).  Returns ``(ridx, rows, hdtl)`` where
+    ``ridx == R`` drops the row and ``hdtl`` has the queue-head pops
+    applied (advance head; clear tail when the queue empties)."""
+    R = sg.nd + sg.nd * sg.nd
+    cc = jnp.minimum(cand, R - 1)
+    crow = run[cc]                                   # (K, 6)
+    h = jnp.where(cand < R, hdtl[cc, 0], -1)         # head task or -1
+    # a resource whose task ends exactly at t counts as free in the
+    # serial engine before its completion pops; its run slot is still
+    # occupied here, so defer that start one trip (the pop at the same
+    # simulated time re-candidates the resource — start times, and
+    # therefore the schedule, are unchanged)
+    go = (h >= 0) & (crow[:, 5] <= t) & ~jnp.isfinite(crow[:, 0])
+    hh = jnp.maximum(h, 0)
+    end_c = t + dur[hh]
+    ridx = jnp.where(go, cc, R)                      # OOB drops
+    hrow = tkn[hh]                                   # (K, 3)
+    rows = jnp.stack(
+        [end_c, jnp.full_like(end_c, ftrip), hrow[:, 1], hrow[:, 0],
+         hh.astype(jnp.float32), end_c], axis=1)
+    hn = hrow[:, 2].astype(jnp.int32)
+    hdtl = hdtl.at[ridx].set(jnp.stack(
+        [hn, jnp.where(hn < 0, -1, hdtl[cc, 1])], axis=1))
+    return ridx, rows, hdtl
+
+
+def _lex_pop(run):
+    """Pop the earliest completion from the running table; ties replay the
+    serial heap's (end, start counter) via (end, start trip, ready time,
+    kind/sequence key).  Returns ``(rho, e1, alive)``."""
+    F_BIG = jnp.float32(I32_BIG)
+    e1 = run[:, 0].min()
+    alive = jnp.isfinite(e1)
+    mk = run[:, 0] == e1
+    s1 = jnp.where(mk, run[:, 1], F_BIG).min()
+    mk &= run[:, 1] == s1
+    r1 = jnp.where(mk, run[:, 2], F32_INF).min()
+    mk &= run[:, 2] == r1
+    k1 = jnp.where(mk, run[:, 3], F_BIG).min()
+    rho = jnp.argmax(mk & (run[:, 3] == k1)).astype(jnp.int32)
+    return rho, e1, alive
+
+
+def _readiness(sg: SimGraph, is_canon, req, res_of, tkn, hdtl, need, t,
+               trip_idx, c, c_is_exec, alive):
+    """Readiness triggered by completion ``c``, computed in the completed
+    producer's out-edge row (≤C entries), in the serial emission order:
+    same-device successors (succ position), then transfers (C offset,
+    consumers_on first-edge order).  Same-device edges and cross edges are
+    disjoint, so one C-wide row covers both.  Returns
+    ``(tkn, hdtl, need, i_res)``."""
+    n, nd, C = sg.n, sg.nd, sg.C
+    mm = sg.esrc.shape[0]
+    N = n + mm
+    R = nd + nd * nd
+    cpos = jnp.arange(C, dtype=jnp.int32)
+    cx = jnp.minimum(jnp.maximum(c - n, 0), mm - 1)
+    p = jnp.where(c_is_exec, c, sg.esrc[cx])
+    prow = sg.out_row[jnp.clip(p, 0, n - 1)]         # (C,)
+    pe = jnp.maximum(prow, 0)
+    pvalid = (prow >= 0) & alive
+    ptrig = pvalid & (req[pe] == c)
+    pdst = sg.edst[pe]
+    need = need.at[jnp.where(ptrig, pdst, n)].add(
+        -ptrig.astype(jnp.int32))
+    # last decrement wins the emission slot: max triggered succ
+    # position per destination vertex (tiny C x C pass); parallel
+    # edges collapse onto that single slot
+    samew = pdst[:, None] == pdst[None, :]
+    maxpos = jnp.where(samew & ptrig[None, :], cpos[None, :], -1).max(1)
+    nw = ptrig & (need[pdst] == 0) & (cpos == maxpos)
+    nx = pvalid & c_is_exec & is_canon[pe]
+    i_live = nw | nx
+    base = n + trip_idx * sg.seqw
+    i_task = jnp.where(nw, pdst, jnp.where(nx, n + pe, N))
+    i_key = jnp.where(nw, base + maxpos, sg.koff + base + C + cpos)
+    i_res = jnp.where(i_live, res_of[jnp.minimum(i_task, N - 1)], R)
+    # within-trip chaining: link each entry to the next entry bound
+    # for the same resource (C x C pass); execs and transfers target
+    # disjoint resources, so row order = per-queue emission order
+    samer = (i_res[:, None] == i_res[None, :]) & i_live[None, :]
+    after = samer & (cpos[None, :] > cpos[:, None])
+    succ_k = jnp.where(after, cpos[None, :], C).min(1)
+    has_succ = succ_k < C
+    succ_task = i_task[jnp.minimum(succ_k, C - 1)]
+    is_first = ~(samer & (cpos[None, :] < cpos[:, None])).any(1) & i_live
+    is_last = ~has_succ & i_live
+    # one combined row scatter: (key, ready, chain-next) for the new
+    # entries plus the tail-append link from each queue's old tail
+    rtl = hdtl[jnp.minimum(i_res, R - 1), 1]
+    link_idx = jnp.where(is_first & (rtl >= 0), jnp.maximum(rtl, 0), N)
+    # new tasks and old tails are disjoint and internally deduped, so
+    # the combined row scatter has unique indices
+    tkn = tkn.at[jnp.concatenate([i_task, link_idx])].set(jnp.stack(
+        [jnp.concatenate([i_key.astype(jnp.float32), tkn[link_idx, 0]]),
+         jnp.concatenate([jnp.broadcast_to(t, (C,)), tkn[link_idx, 1]]),
+         jnp.concatenate([jnp.where(has_succ, succ_task, -1
+                                    ).astype(jnp.float32),
+                          i_task.astype(jnp.float32)])], axis=1),
+        unique_indices=True)
+    # every live entry writes its resource's FINAL (head, tail) row, so
+    # duplicate scatter indices all carry identical values
+    fst = jnp.where(samer & is_first[None, :], i_task[None, :], -1).max(1)
+    lst = jnp.where(samer & is_last[None, :], i_task[None, :], -1).max(1)
+    old_hd = hdtl[jnp.minimum(i_res, R - 1), 0]
+    hdtl = hdtl.at[jnp.where(i_live, i_res, R)].set(
+        jnp.stack([jnp.where(rtl < 0, fst, old_hd), lst], axis=1))
+    return tkn, hdtl, need, i_res
+
+
+def _next_cand(sg: SimGraph, i_res, rho, alive):
+    """Next trip's candidate list: the resources whose queue gained a
+    task plus the resource freed by the pop."""
+    R = sg.nd + sg.nd * sg.nd
+    K = max(sg.nd, sg.C + 1)
+    cand = jnp.concatenate([i_res, jnp.where(alive, rho, R)[None]])
+    if K > sg.C + 1:
+        cand = jnp.concatenate([cand, jnp.full(K - sg.C - 1, R,
+                                               jnp.int32)])
+    return cand
+
+
+@partial(jax.jit, static_argnames=())
+def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Noise-free 'fifo' WC makespan of one assignment.
+
+    Returns ``(makespan, ok)``; ``ok`` is False when the episode deadlocks
+    (the host wrapper raises, matching the numpy engines).
+
+    Performance shape: each resource's FIFO queue is an intrusive linked
+    list (head/tail pointers plus a per-task ``next``), the running tasks
+    live in a compact (R, 6) per-resource table, and every per-trip update
+    is a gather or a ≤C-index scatter — the work-conserving start pass
+    only examines the carried *candidate list* (the resource freed by the
+    last completion plus the ≤C whose queue gained a task; every other
+    resource is busy or free-and-empty, an invariant the pass maintains).
+    The trip loop is a ``while_loop`` that exits when the heap drains, so
+    an episode costs exactly its own completion count.  Queue keys are
+    exact-integer float32 (SimGraph.build guarantees keys < 2**24).
+    """
+    n = sg.n
+    R = sg.nd + sg.nd * sg.nd       # devices then directed channels
+    av, is_canon, req, edur, xdur, res_x = _derive_tasks(sg, assignment)
+    dur = jnp.concatenate([edur, xdur])
+    res_of = jnp.concatenate([av, res_x])
+    tkn, hdtl, run, need, cand = _init_episode(sg, av)
 
     def trip(state):
         (tkn, hdtl, run, need, cand, t, ms, n_done, trip_idx) = state
         ftrip = trip_idx.astype(jnp.float32)
 
-        # ---- work-conserving start pass over candidate resources: a free
-        # resource starts its queue head (duplicate candidates are
-        # idempotent — same head, same writes)
-        cc = jnp.minimum(cand, R - 1)
-        crow = run[cc]                                   # (K, 6)
-        h = jnp.where(cand < R, hdtl[cc, 0], -1)         # head task or -1
-        # a resource whose task ends exactly at t counts as free in the
-        # serial engine before its completion pops; its run slot is still
-        # occupied here, so defer that start one trip (the pop at the same
-        # simulated time re-candidates the resource — start times, and
-        # therefore the schedule, are unchanged)
-        go = (h >= 0) & (crow[:, 5] <= t) & ~jnp.isfinite(crow[:, 0])
-        hh = jnp.maximum(h, 0)
-        end_c = t + dur[hh]
-        ridx = jnp.where(go, cc, R)                      # OOB drops
-        hrow = tkn[hh]                                   # (K, 3)
-        run = run.at[ridx].set(jnp.stack(
-            [end_c, jnp.full_like(end_c, ftrip), hrow[:, 1], hrow[:, 0],
-             hh.astype(jnp.float32), end_c], axis=1))
-        # pop: advance head; clear tail when the queue empties
-        hn = hrow[:, 2].astype(jnp.int32)
-        hdtl = hdtl.at[ridx].set(jnp.stack(
-            [hn, jnp.where(hn < 0, -1, hdtl[cc, 1])], axis=1))
+        ridx, rows, hdtl = _start_pass(sg, dur, tkn, hdtl, run, cand, t,
+                                       ftrip)
+        run = run.at[ridx].set(rows)
 
-        # ---- pop the earliest completion from the running table; ties
-        # replay the serial heap's (end, start counter) via
-        # (end, start trip, ready time, kind/sequence key)
-        e1 = run[:, 0].min()
-        alive = jnp.isfinite(e1)
-        mk = run[:, 0] == e1
-        s1 = jnp.where(mk, run[:, 1], F_BIG).min()
-        mk &= run[:, 1] == s1
-        r1 = jnp.where(mk, run[:, 2], F32_INF).min()
-        mk &= run[:, 2] == r1
-        k1 = jnp.where(mk, run[:, 3], F_BIG).min()
-        rho = jnp.argmax(mk & (run[:, 3] == k1)).astype(jnp.int32)
+        rho, e1, alive = _lex_pop(run)
         c = jnp.where(alive, run[rho, 4].astype(jnp.int32), -1)
         run = run.at[jnp.where(alive, rho, R), 0].set(F32_INF)
         c_is_exec = alive & (c < n)
@@ -306,68 +410,10 @@ def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
         ms = jnp.where(alive, e1, ms)
         n_done = n_done + jnp.where(c_is_exec, 1, 0)
 
-        # ---- readiness triggered by c, computed in the completed
-        # producer's out-edge row (≤C entries), in the serial emission
-        # order: same-device successors (succ position), then transfers
-        # (C offset, consumers_on first-edge order).  Same-device edges
-        # and cross edges are disjoint, so one C-wide row covers both.
-        cx = jnp.minimum(jnp.maximum(c - n, 0), mm - 1)
-        p = jnp.where(c_is_exec, c, sg.esrc[cx])
-        prow = sg.out_row[jnp.clip(p, 0, n - 1)]         # (C,)
-        pe = jnp.maximum(prow, 0)
-        pvalid = (prow >= 0) & alive
-        ptrig = pvalid & (req[pe] == c)
-        pdst = sg.edst[pe]
-        need = need.at[jnp.where(ptrig, pdst, n)].add(
-            -ptrig.astype(jnp.int32))
-        # last decrement wins the emission slot: max triggered succ
-        # position per destination vertex (tiny C x C pass); parallel
-        # edges collapse onto that single slot
-        samew = pdst[:, None] == pdst[None, :]
-        maxpos = jnp.where(samew & ptrig[None, :], cpos[None, :], -1).max(1)
-        nw = ptrig & (need[pdst] == 0) & (cpos == maxpos)
-        nx = pvalid & c_is_exec & is_canon[pe]
-        i_live = nw | nx
-        base = n + trip_idx * sg.seqw
-        i_task = jnp.where(nw, pdst, jnp.where(nx, n + pe, N))
-        i_key = jnp.where(nw, base + maxpos, sg.koff + base + C + cpos)
-        i_res = jnp.where(i_live, res_of[jnp.minimum(i_task, N - 1)], R)
-        # within-trip chaining: link each entry to the next entry bound
-        # for the same resource (C x C pass); execs and transfers target
-        # disjoint resources, so row order = per-queue emission order
-        samer = (i_res[:, None] == i_res[None, :]) & i_live[None, :]
-        after = samer & (cpos[None, :] > cpos[:, None])
-        succ_k = jnp.where(after, cpos[None, :], C).min(1)
-        has_succ = succ_k < C
-        succ_task = i_task[jnp.minimum(succ_k, C - 1)]
-        is_first = ~(samer & (cpos[None, :] < cpos[:, None])).any(1) & i_live
-        is_last = ~has_succ & i_live
-        # one combined row scatter: (key, ready, chain-next) for the new
-        # entries plus the tail-append link from each queue's old tail
-        rtl = hdtl[jnp.minimum(i_res, R - 1), 1]
-        link_idx = jnp.where(is_first & (rtl >= 0), jnp.maximum(rtl, 0), N)
-        # new tasks and old tails are disjoint and internally deduped, so
-        # the combined row scatter has unique indices
-        tkn = tkn.at[jnp.concatenate([i_task, link_idx])].set(jnp.stack(
-            [jnp.concatenate([i_key.astype(jnp.float32), tkn[link_idx, 0]]),
-             jnp.concatenate([jnp.broadcast_to(t, (C,)), tkn[link_idx, 1]]),
-             jnp.concatenate([jnp.where(has_succ, succ_task, -1
-                                        ).astype(jnp.float32),
-                              i_task.astype(jnp.float32)])], axis=1),
-            unique_indices=True)
-        # every live entry writes its resource's FINAL (head, tail) row, so
-        # duplicate scatter indices all carry identical values
-        fst = jnp.where(samer & is_first[None, :], i_task[None, :], -1).max(1)
-        lst = jnp.where(samer & is_last[None, :], i_task[None, :], -1).max(1)
-        old_hd = hdtl[jnp.minimum(i_res, R - 1), 0]
-        hdtl = hdtl.at[jnp.where(i_live, i_res, R)].set(
-            jnp.stack([jnp.where(rtl < 0, fst, old_hd), lst], axis=1))
-
-        cand = jnp.concatenate([i_res, jnp.where(alive, rho, R)[None]])
-        if K > C + 1:
-            cand = jnp.concatenate([cand, jnp.full(K - C - 1, R,
-                                                   jnp.int32)])
-
+        tkn, hdtl, need, i_res = _readiness(sg, is_canon, req, res_of, tkn,
+                                            hdtl, need, t, trip_idx, c,
+                                            c_is_exec, alive)
+        cand = _next_cand(sg, i_res, rho, alive)
         return (tkn, hdtl, run, need, cand, t, ms, n_done, trip_idx + 1)
 
     state = (tkn, hdtl, run, need, cand, jnp.float32(0.0), jnp.float32(0.0),
@@ -381,18 +427,100 @@ def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 @jax.jit
-def makespan_fifo_batch(sg: SimGraph, assignments):
-    """(K, n) assignments -> ((K,) makespans, (K,) ok flags), one dispatch."""
+def _makespan_fifo_batch_xla(sg: SimGraph, assignments):
     return jax.vmap(lambda a: makespan_fifo(sg, a))(assignments)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
+    """Batched twin of :func:`makespan_fifo` whose per-trip running-table
+    work (start writes, lexicographic pop, popped-slot clear) is one fused
+    Pallas kernel over the whole episode batch instead of B vmapped
+    scatters/reductions.  Decision-exact with the XLA path: both consume
+    the same helper ops and the kernel is bit-pinned to
+    kernels.wc_oracle.ref (tests/test_kernels.py, tests/test_conformance.py)."""
+    n = sg.n
+    R = sg.nd + sg.nd * sg.nd
+    av, is_canon, req, edur, xdur, res_x = jax.vmap(
+        lambda a: _derive_tasks(sg, a))(assignments)
+    dur = jnp.concatenate([edur, xdur], axis=1)
+    res_of = jnp.concatenate([av, res_x], axis=1)
+    tkn, hdtl, run, need, cand = jax.vmap(
+        lambda a: _init_episode(sg, a))(av)
+    B = assignments.shape[0]
+
+    def trip(carry, trip_idx):
+        tkn, hdtl, run, need, cand, t, ms, n_done = carry
+        ftrip = trip_idx.astype(jnp.float32)
+
+        ridx, rows, hdtl = jax.vmap(
+            lambda du, tk, hd, rn, cd, tt: _start_pass(
+                sg, du, tk, hd, rn, cd, tt, ftrip)
+        )(dur, tkn, hdtl, run, cand, t)
+        # the kernel's drop sentinel is -1 (R would alias a padded lane)
+        run, rho, e1 = wc_step(run, rows,
+                               jnp.where(ridx < R, ridx, -1),
+                               interpret=interpret)
+        alive = jnp.isfinite(e1)
+        c = jnp.where(alive, jnp.take_along_axis(
+            run[:, :, 4], rho[:, None], axis=1)[:, 0].astype(jnp.int32), -1)
+        c_is_exec = alive & (c < n)
+        t = jnp.where(alive, e1, t)
+        ms = jnp.where(alive, e1, ms)
+        n_done = n_done + jnp.where(c_is_exec, 1, 0)
+
+        tkn, hdtl, need, i_res = jax.vmap(
+            lambda ic, rq, ro, tk, hd, ne, tt, cv, ce, al: _readiness(
+                sg, ic, rq, ro, tk, hd, ne, tt, trip_idx, cv, ce, al)
+        )(is_canon, req, res_of, tkn, hdtl, need, t, c, c_is_exec, alive)
+        cand = jax.vmap(
+            lambda ir, rh, al: _next_cand(sg, ir, rh, al))(i_res, rho, alive)
+        return (tkn, hdtl, run, need, cand, t, ms, n_done), None
+
+    carry = (tkn, hdtl, run, need, cand, jnp.zeros(B), jnp.zeros(B),
+             jnp.zeros(B, jnp.int32))
+    carry = jax.lax.scan(trip, carry,
+                         jnp.arange(sg.n_trips + 1, dtype=jnp.int32))[0]
+    ms, n_done = carry[6], carry[7]
+    return ms, n_done == sg.n_compute
+
+
+def makespan_fifo_batch(sg: SimGraph, assignments, backend: str = "xla",
+                        interpret: bool | None = None):
+    """(K, n) assignments -> ((K,) makespans, (K,) ok flags), one dispatch.
+
+    ``backend="xla"`` vmaps the single-episode scan; ``backend="pallas"``
+    routes the per-trip running-table work through the fused
+    kernels.wc_oracle step (``interpret=None`` auto-falls back to the
+    interpreter off-TPU).  Both are decision-exact twins of the serial
+    engine."""
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        return _makespan_fifo_batch_pallas(sg, assignments, interpret)
+    if backend != "xla":
+        raise ValueError(f"unknown oracle backend {backend!r}; "
+                         f"expected one of {ORACLE_BACKENDS}")
+    return _makespan_fifo_batch_xla(sg, assignments)
 
 
 class JaxWCEngine:
     """Host-friendly wrapper mirroring BatchWCEngine's surface for the
-    noise-free fifo case (the configuration the fused trainer uses)."""
+    noise-free fifo case (the configuration the fused trainer uses).
 
-    def __init__(self, graph: DataflowGraph, devices: DeviceModel):
+    ``backend`` selects the batched evaluation path ("xla" | "pallas");
+    single-assignment ``exec_time`` always uses the XLA scan (a batch of
+    one has nothing to fuse)."""
+
+    def __init__(self, graph: DataflowGraph, devices: DeviceModel,
+                 backend: str = "xla", interpret: bool | None = None):
+        if backend not in ORACLE_BACKENDS:
+            raise ValueError(f"unknown oracle backend {backend!r}; "
+                             f"expected one of {ORACLE_BACKENDS}")
         self.graph, self.devices = graph, devices
         self.sim_graph = SimGraph.build(graph, devices)
+        self.backend = backend
+        self.interpret = interpret
 
     def exec_time(self, assignment) -> float:
         ms, ok = makespan_fifo(self.sim_graph,
@@ -405,7 +533,9 @@ class JaxWCEngine:
         A = np.asarray(assignments)
         if A.ndim == 1:
             A = A[None, :]
-        ms, ok = makespan_fifo_batch(self.sim_graph, jnp.asarray(A))
+        ms, ok = makespan_fifo_batch(self.sim_graph, jnp.asarray(A),
+                                     backend=self.backend,
+                                     interpret=self.interpret)
         if not bool(np.asarray(ok).all()):
             raise RuntimeError("deadlock: episode never completed")
         return np.asarray(ms)

@@ -57,7 +57,7 @@ from ..train.optim import AdamState, adamw_update
 from .assign import BIG, GraphData, _device_features, _etf_update
 from .nn import apply_mlp, leaky_relu, masked_log_softmax
 from .policies import episode_encodings, plc_logits
-from .sim_jax import SimGraph, makespan_fifo
+from .sim_jax import SimGraph, makespan_fifo, _makespan_fifo_batch_pallas
 
 
 class RewardStats(NamedTuple):
@@ -117,9 +117,11 @@ def _episode_rng_tables(keys, n: int, nd: int):
 
 
 # ------------------------------------------------- phase 1: record sample
-@partial(jax.jit, static_argnames=("sel_mode", "plc_mode"))
+@partial(jax.jit, static_argnames=("sel_mode", "plc_mode",
+                                   "encoder_backend"))
 def sample_episodes(params, gd: GraphData, keys, eps,
-                    sel_mode: str = "learned", plc_mode: str = "learned"):
+                    sel_mode: str = "learned", plc_mode: str = "learned",
+                    encoder_backend: str = "xla"):
     """K recorded sampling episodes in one batch-explicit forward scan.
 
     Returns dict with ``actions`` (K, n, 2), ``assignment`` (K, n),
@@ -140,7 +142,8 @@ def sample_episodes(params, gd: GraphData, keys, eps,
     n, nd = gd.n, gd.nd
     K = keys.shape[0]
     H, sel_logits, z_plc = episode_encodings(
-        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
     dh = H.shape[1]
     rng = _episode_rng_tables(keys, n, nd)
     feats = jax.vmap(_device_features, in_axes=(None, 0, 0, 0, 0, 0, 0))
@@ -253,7 +256,8 @@ def _plc_step_logps(params, H, z_plc, nd: int, x_devs, v, d):
 
 
 def _parallel_step_logps(params, gd: GraphData, masks, x_devs, actions,
-                         sel: bool = True, plc: bool = True):
+                         sel: bool = True, plc: bool = True,
+                         encoder_backend: str = "xla"):
     """Per-step SEL/PLC log-probs and entropies for recorded episodes,
     evaluated in parallel over steps (no scan).
 
@@ -261,7 +265,8 @@ def _parallel_step_logps(params, gd: GraphData, masks, x_devs, actions,
     None when the corresponding policy is disabled).
     """
     H, sel_logits, z_plc = episode_encodings(
-        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
     v = actions[..., 0]                                     # (K, S)
     d = actions[..., 1]
     neg = jnp.finfo(sel_logits.dtype).min
@@ -286,7 +291,8 @@ def _parallel_step_logps(params, gd: GraphData, masks, x_devs, actions,
 
 
 def fused_pg_loss(params, gd: GraphData, rec, advs, entropy_w,
-                  sel_learned: bool = True, plc_learned: bool = True):
+                  sel_learned: bool = True, plc_learned: bool = True,
+                  encoder_backend: str = "xla"):
     """Batch REINFORCE surrogate with all steps evaluated in parallel.
 
     Same math as ``training._pg_loss_and_grad_batch``'s forced replay —
@@ -307,7 +313,8 @@ def fused_pg_loss(params, gd: GraphData, rec, advs, entropy_w,
       replay.
     """
     H, sel_logits, z_plc = episode_encodings(
-        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path)
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
     nd = gd.nd
     actions = rec["actions"]
     v = actions[..., 0]                                     # (K, S)
@@ -342,7 +349,13 @@ def fused_pg_loss(params, gd: GraphData, rec, advs, entropy_w,
 # --------------------------------------------------------- fused updates
 @dataclasses.dataclass(frozen=True)
 class FusedStage2Config:
-    """Static configuration of one fused Stage-II chunk."""
+    """Static configuration of one fused Stage-II chunk.
+
+    ``encoder_backend`` routes the GNN aggregation ("xla" | "pallas"
+    kernels.gnn_mp); ``oracle_backend`` routes the batched WC reward
+    oracle ("xla" | "pallas" kernels.wc_oracle).  Both default to the
+    reference XLA paths and are decision-exactness-pinned by the
+    conformance/property suites."""
     batch_size: int
     updates: int                  # scan length of one dispatch
     sel_mode: str = "learned"
@@ -351,6 +364,8 @@ class FusedStage2Config:
     plc_learned: bool = True
     normalize_adv: bool = True
     entropy_weight: float = 1e-2
+    encoder_backend: str = "xla"
+    oracle_backend: str = "xla"
 
 
 def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
@@ -379,6 +394,9 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
                          f"{n_devices} devices")
     kb = cfg.batch_size // n_devices
     pmapped = n_devices > 1
+    # resolve the Pallas interpret fallback once, at build time (a traced
+    # value cannot pick it; jit re-specializes if the backend changes)
+    oracle_interpret = jax.default_backend() == "cpu"
 
     def one_update(carry, _):
         params, opt_state, rstats, key, episode = carry
@@ -389,9 +407,14 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
             keys = jax.lax.dynamic_slice_in_dim(
                 keys, jax.lax.axis_index("batch") * kb, kb)
         rec = sample_episodes(params, gd, keys, eps,
-                              sel_mode=cfg.sel_mode, plc_mode=cfg.plc_mode)
-        ms, _ok = jax.vmap(lambda a: makespan_fifo(sg, a))(
-            rec["assignment"])
+                              sel_mode=cfg.sel_mode, plc_mode=cfg.plc_mode,
+                              encoder_backend=cfg.encoder_backend)
+        if cfg.oracle_backend == "pallas":
+            ms, _ok = _makespan_fifo_batch_pallas(sg, rec["assignment"],
+                                                  oracle_interpret)
+        else:
+            ms, _ok = jax.vmap(lambda a: makespan_fifo(sg, a))(
+                rec["assignment"])
         rs = jax.lax.stop_gradient(-ms)
         if pmapped:
             batch_mean = jax.lax.pmean(rs.mean(), "batch")
@@ -408,7 +431,8 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
 
         loss, grads = jax.value_and_grad(fused_pg_loss)(
             params, gd, rec, advs, jnp.float32(cfg.entropy_weight),
-            sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned)
+            sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned,
+            encoder_backend=cfg.encoder_backend)
         if pmapped:
             # one fused all-reduce: flattened grads + loss + reward sums
             flat, unravel = ravel_pytree(grads)
@@ -468,7 +492,7 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
 
 # ----------------------------------------------------- fused imitation
 def build_fused_stage1(gd: GraphData, lr_sched, batch_size: int,
-                       updates: int):
+                       updates: int, encoder_backend: str = "xla"):
     """Compile a Stage-I chunk: `updates` imitation steps per dispatch,
     each averaging the NLL of `batch_size` pre-computed teacher episodes.
 
@@ -517,7 +541,8 @@ def build_fused_stage1(gd: GraphData, lr_sched, batch_size: int,
         """-(mean sel logp + mean plc logp) per episode, averaged over the
         batch — the step-parallel twin of ``_imitation_loss_and_grad``."""
         sel_logp, _, plc_logp, _ = _parallel_step_logps(
-            params, gd, masks, x_devs, actions)
+            params, gd, masks, x_devs, actions,
+            encoder_backend=encoder_backend)
         return -(sel_logp.mean() + plc_logp.mean())
 
     @jax.jit

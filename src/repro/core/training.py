@@ -36,13 +36,16 @@ from .simulator import WCSimulator
 
 
 # ------------------------------------------------------------------ losses
-@partial(jax.jit, static_argnames=("sel_learned", "plc_learned"))
+@partial(jax.jit, static_argnames=("sel_learned", "plc_learned",
+                                   "encoder_backend"))
 def _pg_loss_and_grad(params, gd: GraphData, key, actions, advantage,
                       entropy_w, sel_learned: bool = True,
-                      plc_learned: bool = True):
+                      plc_learned: bool = True,
+                      encoder_backend: str = "xla"):
     def loss_fn(p):
         out = rollout(p, gd, key, jnp.float32(0.0), actions,
-                      jnp.array(True), greedy=False)
+                      jnp.array(True), greedy=False,
+                      encoder_backend=encoder_backend)
         logp = 0.0
         ent = 0.0
         if sel_learned:
@@ -56,11 +59,13 @@ def _pg_loss_and_grad(params, gd: GraphData, key, actions, advantage,
     return jax.value_and_grad(loss_fn)(params)
 
 
-@partial(jax.jit, static_argnames=("sel_learned", "plc_learned"))
+@partial(jax.jit, static_argnames=("sel_learned", "plc_learned",
+                                   "encoder_backend"))
 def _pg_loss_and_grad_batch(params, gd: GraphData, keys, actions,
                             advantages, entropy_w,
                             sel_learned: bool = True,
-                            plc_learned: bool = True):
+                            plc_learned: bool = True,
+                            encoder_backend: str = "xla"):
     """Batch-averaged REINFORCE: K replayed episodes, one gradient.
 
     Like `_pg_loss_and_grad`, the Table-3 ablation modes drop the
@@ -69,7 +74,8 @@ def _pg_loss_and_grad_batch(params, gd: GraphData, keys, actions,
     def loss_fn(p):
         def one(key, act, adv):
             out = rollout(p, gd, key, jnp.float32(0.0), act,
-                          jnp.array(True), greedy=False)
+                          jnp.array(True), greedy=False,
+                          encoder_backend=encoder_backend)
             logp = 0.0
             ent = 0.0
             if sel_learned:
@@ -85,11 +91,13 @@ def _pg_loss_and_grad_batch(params, gd: GraphData, keys, actions,
     return jax.value_and_grad(loss_fn)(params)
 
 
-@jax.jit
-def _imitation_loss_and_grad(params, gd: GraphData, key, teacher_actions):
+@partial(jax.jit, static_argnames=("encoder_backend",))
+def _imitation_loss_and_grad(params, gd: GraphData, key, teacher_actions,
+                             encoder_backend: str = "xla"):
     def loss_fn(p):
         out = rollout(p, gd, key, jnp.float32(0.0), teacher_actions,
-                      jnp.array(True), greedy=False)
+                      jnp.array(True), greedy=False,
+                      encoder_backend=encoder_backend)
         return -(out["sel_logp"].mean() + out["plc_logp"].mean())
 
     return jax.value_and_grad(loss_fn)(params)
@@ -116,7 +124,8 @@ class DopplerTrainer:
                  normalize_adv: bool = True,
                  comm_factor: float = 4.0,
                  sel_mode: str = "learned", plc_mode: str = "learned",
-                 hierarchy=None):
+                 hierarchy=None, encoder_backend: str = "xla",
+                 oracle_backend: str = "xla"):
         # Hierarchical mode (core/hierarchy.py): coarsen the flat graph and
         # train the *unchanged* dual policy on the segment graph — every
         # stage, engine, and checkpoint below operates at segment level;
@@ -148,6 +157,19 @@ class DopplerTrainer:
         self.normalize_adv = normalize_adv
         # Table-3 ablation modes: 'learned' | 'cp' (SEL) / 'etf' (PLC)
         self.sel_mode, self.plc_mode = sel_mode, plc_mode
+        # accelerator backends: "xla" reference paths or the Pallas
+        # kernels (gnn.ENCODER_BACKENDS / sim_jax.ORACLE_BACKENDS) —
+        # decision-exact twins, pinned by the conformance/property suites
+        from .gnn import ENCODER_BACKENDS
+        from .sim_jax import ORACLE_BACKENDS
+        if encoder_backend not in ENCODER_BACKENDS:
+            raise ValueError(f"unknown encoder backend {encoder_backend!r};"
+                             f" expected one of {ENCODER_BACKENDS}")
+        if oracle_backend not in ORACLE_BACKENDS:
+            raise ValueError(f"unknown oracle backend {oracle_backend!r};"
+                             f" expected one of {ORACLE_BACKENDS}")
+        self.encoder_backend = encoder_backend
+        self.oracle_backend = oracle_backend
         # running reward statistics (baseline = mean of past rewards, §4.1)
         self._r_sum = 0.0
         self._r_sqsum = 0.0
@@ -180,14 +202,16 @@ class DopplerTrainer:
         out = rollout(self.params, self.gd, self._next_key(),
                       jnp.float32(eps), self._dummy_actions,
                       jnp.array(False), greedy=False,
-                      sel_mode=self.sel_mode, plc_mode=self.plc_mode)
+                      sel_mode=self.sel_mode, plc_mode=self.plc_mode,
+                      encoder_backend=self.encoder_backend)
         return np.asarray(out["assignment"]), np.asarray(out["actions"])
 
     def greedy_assignment(self) -> np.ndarray:
         out = rollout(self.params, self.gd, self._next_key(),
                       jnp.float32(0.0), self._dummy_actions,
                       jnp.array(False), greedy=True,
-                      sel_mode=self.sel_mode, plc_mode=self.plc_mode)
+                      sel_mode=self.sel_mode, plc_mode=self.plc_mode,
+                      encoder_backend=self.encoder_backend)
         return np.asarray(out["assignment"])
 
     def _apply_grads(self, grads):
@@ -205,7 +229,8 @@ class DopplerTrainer:
                                                seed=seed + i,
                                                return_actions=True)
             loss, grads = _imitation_loss_and_grad(
-                self.params, self.gd, self._next_key(), jnp.asarray(acts))
+                self.params, self.gd, self._next_key(), jnp.asarray(acts),
+                encoder_backend=self.encoder_backend)
             self._apply_grads(grads)
             self.episode += 1
             losses.append(float(loss))
@@ -267,7 +292,8 @@ class DopplerTrainer:
         _, grads = _pg_loss_and_grad(
             self.params, self.gd, self._next_key(), jnp.asarray(actions),
             jnp.float32(adv), jnp.float32(self.entropy_weight),
-            sel_learned=sel_learned, plc_learned=plc_learned)
+            sel_learned=sel_learned, plc_learned=plc_learned,
+            encoder_backend=self.encoder_backend)
         self._apply_grads(grads)
         self.episode += 1
         if t < self.best_time:
@@ -314,7 +340,8 @@ class DopplerTrainer:
         out = rollout_batch(self.params, self.gd, keys,
                             jnp.float32(eps),
                             sel_mode=self.sel_mode,
-                            plc_mode=self.plc_mode)
+                            plc_mode=self.plc_mode,
+                            encoder_backend=self.encoder_backend)
         assigns = np.asarray(out["assignment"])
         if isinstance(reward, RewardEngine):
             ts = np.asarray(reward.exec_times(assigns, self.episode))
@@ -331,7 +358,8 @@ class DopplerTrainer:
             self.params, self.gd, keys, out["actions"],
             jnp.asarray(advs, jnp.float32),
             jnp.float32(self.entropy_weight),
-            sel_learned=sel_learned, plc_learned=plc_learned)
+            sel_learned=sel_learned, plc_learned=plc_learned,
+            encoder_backend=self.encoder_backend)
         self._apply_grads(grads)
         self.episode += batch_size
         best_k = int(ts.argmin())
@@ -407,7 +435,9 @@ class DopplerTrainer:
             plc_learned=ablation.get("plc_learned",
                                      self.plc_mode == "learned"),
             normalize_adv=self.normalize_adv,
-            entropy_weight=self.entropy_weight)
+            entropy_weight=self.entropy_weight,
+            encoder_backend=self.encoder_backend,
+            oracle_backend=self.oracle_backend)
         cache = getattr(self, "_fused_cache", None)
         if cache is None:
             cache = self._fused_cache = {}
@@ -486,7 +516,8 @@ class DopplerTrainer:
             for i in range(n_episodes)])
         updates = n_episodes // batch_size
         replay_dynamics, chunk = build_fused_stage1(
-            self.gd, self.lr_sched, batch_size, updates)
+            self.gd, self.lr_sched, batch_size, updates,
+            encoder_backend=self.encoder_backend)
         masks, x_devs = replay_dynamics(jnp.asarray(acts, jnp.int32))
         shape = (updates, batch_size)
         out = chunk(self.params, self.opt_state, self.key,

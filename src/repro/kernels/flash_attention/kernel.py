@@ -67,9 +67,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention_bh(q, k, v, *, causal: bool = True, block_q: int = 128,
-                       block_k: int = 128, interpret: bool = False):
+                       block_k: int = 128, interpret: bool | None = None):
     """q, k, v: (BH, S, d) with matching head counts (GQA expansion is done
-    by ops.py).  Returns (BH, S, d)."""
+    by ops.py).  Returns (BH, S, d).  ``interpret=None`` resolves to True
+    on CPU hosts (the convention every kernels/* entry point follows)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     bh, sq, d = q.shape
     sk = k.shape[1]
     block_q = min(block_q, sq)

@@ -3,6 +3,16 @@
 `segment_sum_mp(msg, dst, n)` == jax.ops.segment_sum(msg, dst, n) but
 restructured for the MXU (see kernel.py).  The one-hot assignment build is
 pure XLA (sort + compare), done once per episode alongside the GNN pass.
+
+Two properties the policy stack relies on (tests/test_kernels.py):
+
+* differentiable — ``pallas_call`` has no autodiff rule, so the wrapper
+  carries a ``custom_vjp`` whose backward pass is the same cotangent
+  gather ``g[dst]`` that ``segment_sum``'s VJP lowers to: gradients match
+  the XLA encoder bit-for-bit whenever the forward does.
+* total on degenerate shapes — an empty edge set (m == 0, the no-edge
+  graphs the trainer's featurization can produce) short-circuits to
+  zeros instead of tracing a zero-size kernel grid.
 """
 from __future__ import annotations
 
@@ -10,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import segment_aggregate_blocked
 
@@ -23,14 +34,8 @@ def _pad_to(x, size, axis=0):
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("n", "node_block", "edge_tile",
-                                   "interpret"))
-def segment_sum_mp(msg, dst, *, n: int, node_block: int = 128,
-                   edge_tile: int = 128, interpret: bool | None = None):
-    """msg: (m, d) edge messages; dst: (m,) destination node ids.
-    Returns (n, d) with out[v] = sum over edges with dst==v."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+def _segment_sum_impl(msg, dst, n: int, node_block: int, edge_tile: int,
+                      interpret: bool):
     m, d = msg.shape
     order = jnp.argsort(dst)
     msg_s = msg[order]
@@ -52,3 +57,35 @@ def segment_sum_mp(msg, dst, *, n: int, node_block: int = 128,
     out = segment_aggregate_blocked(assign, msg_s.reshape(nt, edge_tile, d),
                                     interpret=interpret)
     return out.reshape(n_pad, d)[:n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _segment_sum_vjp(msg, dst, n, node_block, edge_tile, interpret):
+    return _segment_sum_impl(msg, dst, n, node_block, edge_tile, interpret)
+
+
+def _segment_sum_fwd(msg, dst, n, node_block, edge_tile, interpret):
+    out = _segment_sum_impl(msg, dst, n, node_block, edge_tile, interpret)
+    return out, dst
+
+
+def _segment_sum_bwd(n, node_block, edge_tile, interpret, dst, g):
+    # d/dmsg of sum-by-destination is the cotangent gather — identical to
+    # segment_sum's own VJP; int dst gets the mandatory float0 zero
+    return (g[dst], np.zeros(dst.shape, dtype=jax.dtypes.float0))
+
+
+_segment_sum_vjp.defvjp(_segment_sum_fwd, _segment_sum_bwd)
+
+
+@partial(jax.jit, static_argnames=("n", "node_block", "edge_tile",
+                                   "interpret"))
+def segment_sum_mp(msg, dst, *, n: int, node_block: int = 128,
+                   edge_tile: int = 128, interpret: bool | None = None):
+    """msg: (m, d) edge messages; dst: (m,) destination node ids.
+    Returns (n, d) with out[v] = sum over edges with dst==v."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if msg.shape[0] == 0:
+        return jnp.zeros((n, msg.shape[1]), msg.dtype)
+    return _segment_sum_vjp(msg, dst, n, node_block, edge_tile, interpret)

@@ -61,10 +61,14 @@ def _gla_kernel(q_ref, k_ref, v_ref, cum_ref, y_ref, state_scr, *,
 
 
 def mamba2_chunk_scan(q, k, v, log_a, *, chunk: int = 128,
-                      interpret: bool = False):
+                      interpret: bool | None = None):
     """q, k: (BH, S, N); v: (BH, S, P); log_a: (BH, S) (log decay <= 0).
     Returns y: (BH, S, P).  Within-chunk cumulative log-decay is computed
-    outside (cheap, bandwidth-bound) so the kernel is pure MXU work."""
+    outside (cheap, bandwidth-bound) so the kernel is pure MXU work.
+    ``interpret=None`` resolves to True on CPU hosts (the convention
+    every kernels/* entry point follows)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
     bh, s, n = q.shape
     p = v.shape[-1]
     chunk = min(chunk, s)

@@ -1,0 +1,117 @@
+"""Batch-blocked WC-oracle trip-step Pallas TPU kernel.
+
+One trip of the device-resident work-conserving oracle
+(``core.sim_jax``) does three things to the per-resource running table:
+write the start pass's new rows, pop the lexicographic-minimum
+completion, clear the popped slot.  On the XLA path these are a row
+scatter plus four masked global mins per episode; on wide Stage-II
+batches that is thousands of tiny reductions.  This kernel fuses all
+three into one VMEM-resident pass per batch block:
+
+  layout: the (B, R, 6) table is transposed/padded to (B, 8, Rp) so each
+    of the six table columns is a contiguous (Bb, Rp) lane plane — f32
+    (8, 128)-tile friendly, min-reductions run along lanes.  Columns 6-7
+    are padding; padded lanes carry end = +inf so they never win a pop.
+  start write: scatter-free — each candidate row one-hot-matches its
+    target lane (ridx == lane iota, -1 drops) and the ≤K matches
+    max-combine into the table (duplicate candidates carry identical
+    rows, so the combine is exact).
+  pop: the serial heap's tie-break replayed as four chained masked lane
+    mins over (end, start trip, ready time, key); the first matching
+    lane is selected by a masked-iota min, then the popped lane's end is
+    cleared to +inf in the same pass.
+
+Grid: (batch_blocks,).  Every operand block is resident; there is no
+cross-block reduction, so episodes in different blocks are independent —
+exactly the vmap semantics of the XLA path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Python floats, not jnp scalars: pallas kernels cannot capture jax arrays
+F_BIG = float(2**31 - 1)
+F_INF = float("inf")
+
+
+def _wc_step_kernel(run_ref, rows_ref, ridx_ref,
+                    out_run_ref, rho_ref, e1_ref, *, R):
+    run = run_ref[...]                                 # (Bb, 8, Rp)
+    rows = rows_ref[...]                               # (Bb, 8, Kp)
+    ridx = ridx_ref[...]                               # (Bb, Kp)
+    Bb, _, Rp = run.shape
+    Kp = ridx.shape[1]
+
+    # ---- start pass: one-hot masked max-combine (scatter-free write)
+    lane3 = jax.lax.broadcasted_iota(jnp.int32, (Bb, Kp, Rp), 2)
+    hit = ridx[:, :, None] == lane3                    # -1 never matches
+    written = hit.any(axis=1)                          # (Bb, Rp)
+    cols = []
+    for c in range(6):
+        val = jnp.max(jnp.where(hit, rows[:, c, :][:, :, None], -jnp.inf),
+                      axis=1)
+        cols.append(jnp.where(written, val, run[:, c, :]))
+    end, strip, rdy, key = cols[0], cols[1], cols[2], cols[3]
+
+    # ---- lexicographic pop: (end, start trip, ready time, key)
+    e1 = jnp.min(end, axis=1)                          # (Bb,)
+    mk = end == e1[:, None]
+    s1 = jnp.min(jnp.where(mk, strip, F_BIG), axis=1)
+    mk &= strip == s1[:, None]
+    r1 = jnp.min(jnp.where(mk, rdy, F_INF), axis=1)
+    mk &= rdy == r1[:, None]
+    k1 = jnp.min(jnp.where(mk, key, F_BIG), axis=1)
+    mk &= key == k1[:, None]
+    lane2 = jax.lax.broadcasted_iota(jnp.int32, (Bb, Rp), 1)
+    rho = jnp.min(jnp.where(mk, lane2, Rp), axis=1)    # first matching lane
+    # a drained episode's tie-break can land on a padded lane; the caller
+    # gates rho on isfinite(e1), so only the range needs pinning
+    rho = jnp.minimum(rho, R - 1)
+    alive = jnp.isfinite(e1)
+
+    # ---- clear the popped slot's end time
+    clear = alive[:, None] & (lane2 == rho[:, None])
+    cols[0] = jnp.where(clear, F_INF, end)
+
+    for c in range(6):
+        out_run_ref[:, c, :] = cols[c]
+    out_run_ref[:, 6, :] = run[:, 6, :]
+    out_run_ref[:, 7, :] = run[:, 7, :]
+    rho_ref[...] = jnp.broadcast_to(rho[:, None], rho_ref.shape)
+    e1_ref[...] = jnp.broadcast_to(e1[:, None], e1_ref.shape)
+
+
+def wc_step_blocked(run_t, rows_t, ridx, *, R: int, block_b: int = 8,
+                    interpret: bool = False):
+    """run_t: (Bp, 8, Rp) column-major running table; rows_t: (Bp, 8, Kp)
+    start rows; ridx: (Bp, Kp) int32 targets (-1 drops).  Bp divisible by
+    block_b; padded lanes must carry end = +inf.  Returns
+    (run_out (Bp, 8, Rp), rho (Bp, 128) int32, e1 (Bp, 128) f32) with the
+    per-episode scalars broadcast across lanes."""
+    Bp, _, Rp = run_t.shape
+    Kp = ridx.shape[1]
+    kernel = functools.partial(_wc_step_kernel, R=R)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, 8, Rp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, 8, Kp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, Kp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 8, Rp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, 8, Rp), run_t.dtype),
+            jax.ShapeDtypeStruct((Bp, 128), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(run_t, rows_t, ridx)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused WC-oracle trip-step kernel.
+
+``wc_step_ref`` is the batched, unpadded restatement of the three
+scheduling sub-steps inside ``core.sim_jax.makespan_fifo``'s trip body:
+
+  1. write the work-conserving start rows into the running table
+     (scatter-free: a one-hot masked max-combine over the candidate rows),
+  2. pop the earliest completion via the lexicographic
+     (end, start trip, ready time, kind/sequence key) argmin,
+  3. clear the popped row's end time.
+
+The Pallas kernel (kernel.py) must match this reference bit-for-bit on
+``run_out`` and ``e1``; ``rho`` is only meaningful where the episode is
+still alive (``isfinite(e1)``) — on drained episodes the padded kernel may
+legitimately pick a different (unused) tie-break row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F_BIG = jnp.float32(2**31 - 1)
+
+
+def wc_step_ref(run, rows, ridx):
+    """run: (B, R, 6) running table; rows: (B, K, 6) start rows;
+    ridx: (B, K) int32 target resource per row, -1 drops.
+    Returns (run_out (B, R, 6), rho (B,) int32, e1 (B,) f32)."""
+    B, R, _ = run.shape
+    lane = jnp.arange(R, dtype=jnp.int32)
+    hit = ridx[:, :, None] == lane[None, None, :]          # (B, K, R)
+    written = hit.any(axis=1)                              # (B, R)
+    # duplicate candidates carry identical rows, so max-combine is exact
+    val = jnp.where(hit[..., None], rows[:, :, None, :], -jnp.inf).max(axis=1)
+    run1 = jnp.where(written[..., None], val, run)
+
+    e1 = run1[..., 0].min(axis=1)
+    mk = run1[..., 0] == e1[:, None]
+    s1 = jnp.where(mk, run1[..., 1], F_BIG).min(axis=1)
+    mk &= run1[..., 1] == s1[:, None]
+    r1 = jnp.where(mk, run1[..., 2], jnp.inf).min(axis=1)
+    mk &= run1[..., 2] == r1[:, None]
+    k1 = jnp.where(mk, run1[..., 3], F_BIG).min(axis=1)
+    mk &= run1[..., 3] == k1[:, None]
+    rho = jnp.argmax(mk, axis=1).astype(jnp.int32)         # first match
+    alive = jnp.isfinite(e1)
+
+    clear = alive[:, None] & (lane[None, :] == rho[:, None])
+    run_out = run1.at[..., 0].set(jnp.where(clear, jnp.inf, run1[..., 0]))
+    return run_out, rho, e1

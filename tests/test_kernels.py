@@ -10,6 +10,8 @@ from repro.kernels.gnn_mp.ops import segment_sum_mp
 from repro.kernels.gnn_mp.ref import segment_sum_ref
 from repro.kernels.mamba2_scan.kernel import mamba2_chunk_scan
 from repro.kernels.mamba2_scan.ref import gla_ref
+from repro.kernels.wc_oracle.ops import wc_step
+from repro.kernels.wc_oracle.ref import wc_step_ref
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -68,6 +70,174 @@ def test_gnn_mp_sweep(m, n, d):
     ref = segment_sum_ref(msg, dst, n)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_gnn_mp_degenerate():
+    """Empty edge set and single-vertex graphs (graph-domain degeneracies)."""
+    out = segment_sum_mp(jnp.zeros((0, 8)), jnp.zeros((0,), jnp.int32),
+                         n=5, interpret=True)
+    assert out.shape == (5, 8) and not np.asarray(out).any()
+    out = segment_sum_mp(jnp.ones((1, 1)), jnp.zeros((1,), jnp.int32),
+                         n=1, interpret=True)
+    assert np.array_equal(np.asarray(out), [[1.0]])
+
+
+def test_gnn_mp_randomized_shapes():
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        m = int(rng.integers(1, 400))
+        n = int(rng.integers(1, 150))
+        d = int(rng.integers(1, 80))
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m * 1000 + n))
+        msg = jax.random.normal(k1, (m, d))
+        dst = jax.random.randint(k2, (m,), 0, n)
+        out = segment_sum_mp(msg, dst, n=n, interpret=True)
+        ref = segment_sum_ref(msg, dst, n)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_gnn_mp_grad_matches_xla():
+    """custom_vjp cotangent (g[dst]) equals XLA segment_sum's gradient."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    m, n, d = 64, 16, 8
+    msg = jax.random.normal(k1, (m, d))
+    dst = jax.random.randint(k2, (m,), 0, n)
+    w = jax.random.normal(k3, (n, d))
+    g_p = jax.grad(lambda z: (segment_sum_mp(z, dst, n=n, interpret=True)
+                              * w).sum())(msg)
+    g_x = jax.grad(lambda z: (jax.ops.segment_sum(z, dst, num_segments=n)
+                              * w).sum())(msg)
+    assert np.array_equal(np.asarray(g_p), np.asarray(g_x))
+
+
+# ------------------------------------------------------------- wc_oracle
+def _rand_wc_state(rng, B, R, K):
+    """Random running table + start rows honoring the kernel contract:
+    exact-integer f32 keys, duplicate targets carry identical rows, some
+    slots idle (end=+inf), some candidates dropped (ridx=-1)."""
+    run = rng.integers(0, 50, size=(B, R, 6)).astype(np.float32)
+    idle = rng.random((B, R)) < 0.4
+    run[..., 0] = np.where(idle, np.inf, run[..., 0] + 1.0)
+    tgt = rng.integers(0, R, size=(B, K))
+    base = rng.integers(0, 50, size=(B, R, 6)).astype(np.float32)
+    rows = np.take_along_axis(base, tgt[:, :, None], axis=1)
+    drop = rng.random((B, K)) < 0.3
+    ridx = np.where(drop, -1, tgt).astype(np.int32)
+    return jnp.asarray(run), jnp.asarray(rows), jnp.asarray(ridx)
+
+
+@pytest.mark.parametrize("B,R,K", [
+    (3, 20, 5), (1, 1, 1), (8, 130, 140), (5, 6, 2), (2, 2, 1),
+    (16, 257, 129),
+])
+def test_wc_oracle_sweep(B, R, K):
+    """Pallas trip-step kernel vs pure-jnp ref: run_out and e1 must match
+    bit-for-bit; rho wherever the episode is alive.  (2, 2, 1) is the
+    1-device fleet (R = nd + nd**2 = 2) with a single candidate."""
+    rng = np.random.default_rng(B * 1000 + R + K)
+    run, rows, ridx = _rand_wc_state(rng, B, R, K)
+    out_k, rho_k, e1_k = wc_step(run, rows, ridx, interpret=True)
+    out_r, rho_r, e1_r = wc_step_ref(run, rows, ridx)
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert np.array_equal(np.asarray(e1_k), np.asarray(e1_r))
+    alive = np.isfinite(np.asarray(e1_r))
+    assert np.array_equal(np.asarray(rho_k)[alive], np.asarray(rho_r)[alive])
+
+
+def test_wc_oracle_randomized_shapes():
+    rng = np.random.default_rng(23)
+    for _ in range(5):
+        B = int(rng.integers(1, 12))
+        R = int(rng.integers(1, 300))
+        K = int(rng.integers(1, 150))
+        run, rows, ridx = _rand_wc_state(rng, B, R, K)
+        out_k, rho_k, e1_k = wc_step(run, rows, ridx, interpret=True)
+        out_r, rho_r, e1_r = wc_step_ref(run, rows, ridx)
+        assert np.array_equal(np.asarray(out_k), np.asarray(out_r)), (B, R, K)
+        assert np.array_equal(np.asarray(e1_k), np.asarray(e1_r)), (B, R, K)
+        alive = np.isfinite(np.asarray(e1_r))
+        assert np.array_equal(np.asarray(rho_k)[alive],
+                              np.asarray(rho_r)[alive]), (B, R, K)
+
+
+def test_wc_oracle_drained_and_all_dropped():
+    """Drained episode (every slot idle) with every candidate dropped:
+    the table passes through untouched and e1 is +inf (episode dead)."""
+    B, R, K = 3, 7, 4
+    run = jnp.zeros((B, R, 6), jnp.float32).at[..., 0].set(jnp.inf)
+    rows = jnp.ones((B, K, 6), jnp.float32)
+    ridx = jnp.full((B, K), -1, jnp.int32)
+    out_k, _, e1_k = wc_step(run, rows, ridx, interpret=True)
+    out_r, _, e1_r = wc_step_ref(run, rows, ridx)
+    assert np.array_equal(np.asarray(out_k), np.asarray(run))
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert np.all(np.isinf(np.asarray(e1_k))) and np.all(
+        np.isinf(np.asarray(e1_r)))
+
+
+def test_wc_oracle_lexicographic_tiebreak():
+    """All four key columns exercised: equal ends, then equal start trips,
+    then equal ready times force the pop down to the sequence key."""
+    run = np.full((1, 4, 6), 9.0, np.float32)
+    run[0, :, 0] = [5.0, 5.0, 5.0, 5.0]     # end: 4-way tie
+    run[0, :, 1] = [2.0, 1.0, 1.0, 1.0]     # start trip: slot 0 out
+    run[0, :, 2] = [0.0, 3.0, 2.0, 2.0]     # ready: slot 1 out
+    run[0, :, 3] = [0.0, 0.0, 7.0, 4.0]     # key: slot 3 wins
+    rows = np.zeros((1, 1, 6), np.float32)
+    ridx = np.full((1, 1), -1, np.int32)
+    out_k, rho_k, e1_k = wc_step(jnp.asarray(run), jnp.asarray(rows),
+                                 jnp.asarray(ridx), interpret=True)
+    out_r, rho_r, e1_r = wc_step_ref(jnp.asarray(run), jnp.asarray(rows),
+                                     jnp.asarray(ridx))
+    assert int(rho_k[0]) == int(rho_r[0]) == 3
+    assert float(e1_k[0]) == float(e1_r[0]) == 5.0
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert np.isinf(np.asarray(out_k)[0, 3, 0])
+
+
+def test_flash_attention_randomized_shapes():
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        B = int(rng.integers(1, 3))
+        Hkv = int(rng.integers(1, 4))
+        Hq = Hkv * int(rng.integers(1, 3))
+        S = int(rng.choice([128, 256]))
+        d = int(rng.choice([32, 64]))
+        ks = jax.random.split(jax.random.PRNGKey(B * S + Hq), 3)
+        q = jax.random.normal(ks[0], (B, S, Hq, d))
+        k = jax.random.normal(ks[1], (B, S, Hkv, d))
+        v = jax.random.normal(ks[2], (B, S, Hkv, d))
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        G = Hq // Hkv
+        qb = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+        kb = jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+        vb = jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+        ref = attention_ref(qb, kb, vb, causal=True)
+        ref = ref.reshape(B, Hq, S, d).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_mamba2_scan_randomized_shapes():
+    rng = np.random.default_rng(13)
+    for _ in range(3):
+        bh = int(rng.integers(1, 4))
+        s = int(rng.choice([128, 256]))
+        chunk = int(rng.choice([32, 64, 128]))
+        n = int(rng.choice([8, 16, 32]))
+        p = int(rng.choice([16, 32, 64]))
+        ks = jax.random.split(jax.random.PRNGKey(bh * s + n), 4)
+        q = jax.random.normal(ks[0], (bh, s, n)) * 0.5
+        k = jax.random.normal(ks[1], (bh, s, n)) * 0.5
+        v = jax.random.normal(ks[2], (bh, s, p))
+        log_a = -jnp.abs(jax.random.normal(ks[3], (bh, s))) * 0.1
+        out = mamba2_chunk_scan(q, k, v, log_a, chunk=chunk, interpret=True)
+        ref = gla_ref(q, k, v, log_a, chunk=chunk)
+        scale = max(float(jnp.abs(ref).max()), 1.0)
+        np.testing.assert_allclose(np.asarray(out) / scale,
+                                   np.asarray(ref) / scale,
+                                   atol=1e-4, rtol=1e-4)
 
 
 def test_flash_matches_model_attention_path():

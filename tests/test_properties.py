@@ -186,3 +186,70 @@ def test_coarsened_graph_is_simulable(seed, n, target):
     assert t >= sg.critical_path_lower_bound(dev.flops_per_sec) - 1e-12
     serial = sim.run_batch(a, engine="serial")[0, 0]
     assert t == serial
+
+
+# ------------------------------------------------------ backend parity
+@settings(max_examples=3, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 1000), n=st.sampled_from([6, 9]))
+def test_stage2_fused_backend_parity(seed, n):
+    """Same-seed stage2_fused parity across compute backends on chain
+    graphs (in/out-degree <= 1, so the gnn_mp Pallas aggregation is
+    bit-equal to XLA segment_sum: single-element sums are order-free,
+    and its custom_vjp cotangent is the same gather XLA differentiates
+    to).  Encoder output equality => identical sampled trajectories =>
+    bit-identical actions and reward trajectories, and the policy-
+    gradient at matched params agrees to float tolerance (compared
+    pre-optimizer: adamw's m/(sqrt(v)+eps) normalization would amplify
+    sub-eps fusion-rounding residues on dead-gradient leaves without
+    bound).  The Pallas WC oracle is decision-exact and rewards are
+    stop_gradient'ed, so swapping only the oracle leaves trajectories
+    AND final params bit-identical."""
+    import jax
+    import jax.numpy as jnp
+
+    from conftest import make_chain
+    from repro.core.assign import build_graph_data
+    from repro.core.policies import init_policies
+    from repro.core.train_fused import fused_pg_loss, sample_episodes
+    from repro.core.training import DopplerTrainer
+
+    g = make_chain(n)
+    dev = uniform_box(3)
+
+    def run(**kw):
+        tr = DopplerTrainer(g, dev, seed=seed, d_hidden=8,
+                            total_episodes=100, eps0=0.0, eps1=0.0, **kw)
+        t = tr.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+        return np.asarray(t), tr.params
+
+    t_ref, p_ref = run()
+    for kw in ({"oracle_backend": "pallas"},
+               {"encoder_backend": "pallas", "oracle_backend": "pallas"}):
+        t_alt, p_alt = run(**kw)
+        np.testing.assert_array_equal(t_alt, t_ref, err_msg=str(kw))
+        if "encoder_backend" not in kw:
+            for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                            jax.tree_util.tree_leaves(p_alt)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), kw
+
+    # encoder swap at matched params: same trajectories, same gradient
+    gd = build_graph_data(g, dev)
+    params = init_policies(jax.random.PRNGKey(seed), d_hidden=8)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), 4)
+    rec_x = sample_episodes(params, gd, keys, jnp.float32(0.0))
+    rec_p = sample_episodes(params, gd, keys, jnp.float32(0.0),
+                            encoder_backend="pallas")
+    np.testing.assert_array_equal(np.asarray(rec_p["actions"]),
+                                  np.asarray(rec_x["actions"]))
+    advs = jnp.asarray(np.random.default_rng(seed).normal(size=4),
+                       dtype=jnp.float32)
+    l_x, g_x = jax.value_and_grad(fused_pg_loss)(
+        params, gd, rec_x, advs, jnp.float32(1e-2))
+    l_p, g_p = jax.value_and_grad(
+        lambda p: fused_pg_loss(p, gd, rec_p, advs, jnp.float32(1e-2),
+                                encoder_backend="pallas"))(params)
+    assert float(l_p) == pytest.approx(float(l_x), rel=1e-6, abs=1e-9)
+    for a, b in zip(jax.tree_util.tree_leaves(g_x),
+                    jax.tree_util.tree_leaves(g_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-5)

@@ -1,0 +1,85 @@
+"""Warn-only throughput guard: fresh BENCH_<tag>.json vs the committed
+baseline.
+
+CI runs the benchmark suite on shared boxes whose wall-clock jitters far
+too much for a hard perf gate, so this tool *never* fails the build for
+being slow — it prints a loud ``::warning`` (GitHub-annotation syntax)
+for every rate-style metric (``upd_per_sec``, ``eps_per_sec``, ...)
+that regressed beyond the tolerance, and for rows that disappeared.
+It exits non-zero only on *structural* problems (missing/corrupt JSON),
+which indicate the benchmark itself broke.
+
+Usage::
+
+    python tools/bench_guard.py BENCH_train.json baseline/BENCH_train.json
+    python tools/bench_guard.py --tolerance 0.4 BENCH_train.json BENCH_train.json
+
+Tolerance is the allowed fractional drop: 0.3 means warn when a rate
+falls below 70% of baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RATE_KEYS = ("upd_per_sec", "eps_per_sec", "calls_per_sec", "rows_per_sec")
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r.get("derived", {}) for r in doc.get("rows", [])}
+
+
+def compare(current: dict[str, dict], baseline: dict[str, dict],
+            tolerance: float) -> list[str]:
+    warnings = []
+    for name, base_derived in sorted(baseline.items()):
+        if name not in current:
+            warnings.append(f"row '{name}' present in baseline but "
+                            f"missing from the fresh run")
+            continue
+        cur_derived = current[name]
+        for key in RATE_KEYS:
+            if key not in base_derived:
+                continue
+            base = float(base_derived[key])
+            if base <= 0:
+                continue
+            cur = float(cur_derived.get(key, 0.0))
+            if cur < base * (1.0 - tolerance):
+                warnings.append(
+                    f"{name}: {key} {cur:.2f} is {cur / base:.0%} of "
+                    f"baseline {base:.2f} (warn below "
+                    f"{1.0 - tolerance:.0%})")
+    return warnings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="fresh BENCH_<tag>.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_<tag>.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional rate drop before warning "
+                         "(default 0.5: warn below half the baseline)")
+    args = ap.parse_args(argv)
+
+    try:
+        current = load_rows(args.current)
+        baseline = load_rows(args.baseline)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"bench_guard: cannot read inputs: {e}", file=sys.stderr)
+        return 1
+
+    warnings = compare(current, baseline, args.tolerance)
+    for w in warnings:
+        print(f"::warning title=bench regression::{w}")
+    if not warnings:
+        print(f"bench_guard: {args.current} within {args.tolerance:.0%} "
+              f"of baseline ({len(baseline)} rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
