@@ -426,21 +426,8 @@ def makespan_fifo(sg: SimGraph, assignment) -> tuple[jnp.ndarray, jnp.ndarray]:
     return ms, n_done == sg.n_compute
 
 
-@jax.jit
-def _makespan_fifo_batch_xla(sg: SimGraph, assignments):
-    return jax.vmap(lambda a: makespan_fifo(sg, a))(assignments)
-
-
-@partial(jax.jit, static_argnames=("interpret",))
-def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
-    """Batched twin of :func:`makespan_fifo` whose per-trip running-table
-    work (start writes, lexicographic pop, popped-slot clear) is one fused
-    Pallas kernel over the whole episode batch instead of B vmapped
-    scatters/reductions.  Decision-exact with the XLA path: both consume
-    the same helper ops and the kernel is bit-pinned to
-    kernels.wc_oracle.ref (tests/test_kernels.py, tests/test_conformance.py)."""
-    n = sg.n
-    R = sg.nd + sg.nd * sg.nd
+def _batch_setup(sg: SimGraph, assignments):
+    """Vmapped per-episode task systems + initial trip-loop carry."""
     av, is_canon, req, edur, xdur, res_x = jax.vmap(
         lambda a: _derive_tasks(sg, a))(assignments)
     dur = jnp.concatenate([edur, xdur], axis=1)
@@ -448,8 +435,42 @@ def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
     tkn, hdtl, run, need, cand = jax.vmap(
         lambda a: _init_episode(sg, a))(av)
     B = assignments.shape[0]
+    carry = (tkn, hdtl, run, need, cand, jnp.zeros(B), jnp.zeros(B),
+             jnp.zeros(B, jnp.int32))
+    return dur, is_canon, req, res_of, carry
 
-    def trip(carry, trip_idx):
+
+def _run_trips(sg: SimGraph, dur, is_canon, req, res_of, carry, pop_fn):
+    """Shared batched trip loop: one iteration = one serial heap pop per
+    episode, with the running-table work (start writes, lexicographic pop,
+    popped-slot clear) delegated to ``pop_fn`` (vmapped XLA ops or the
+    fused Pallas ``wc_step`` kernel).
+
+    **Trip trimming**: the loop is a batch-level ``while_loop`` that exits
+    as soon as every episode in the batch has completed all its compute
+    tasks (or at the static ``n_trips + 1`` bound).  Trips past an
+    episode's own completion are no-ops in the fixed-trip formulation
+    (the heap is drained, ``alive`` is False, every scatter is masked), so
+    skipping the drained tail is decision-exact — the batch pays for the
+    *longest* episode's completion count instead of the static worst case.
+    A single ``any()`` across the batch drives the exit; there is no
+    per-episode carry select (the cost that rules out a vmapped
+    per-episode ``while_loop``).
+
+    Returns ``(makespans, ok)``; ``ok`` is False for episodes whose heap
+    drained before all compute tasks ran (deadlock — those makespans are
+    garbage and callers must raise or mask).
+    """
+    n = sg.n
+
+    def cond(state):
+        carry, trip_idx = state
+        n_done = carry[7]
+        return ((trip_idx < sg.n_trips + 1)
+                & jnp.any(n_done < sg.n_compute))
+
+    def body(state):
+        carry, trip_idx = state
         tkn, hdtl, run, need, cand, t, ms, n_done = carry
         ftrip = trip_idx.astype(jnp.float32)
 
@@ -457,10 +478,7 @@ def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
             lambda du, tk, hd, rn, cd, tt: _start_pass(
                 sg, du, tk, hd, rn, cd, tt, ftrip)
         )(dur, tkn, hdtl, run, cand, t)
-        # the kernel's drop sentinel is -1 (R would alias a padded lane)
-        run, rho, e1 = wc_step(run, rows,
-                               jnp.where(ridx < R, ridx, -1),
-                               interpret=interpret)
+        run, rho, e1 = pop_fn(run, rows, ridx)
         alive = jnp.isfinite(e1)
         c = jnp.where(alive, jnp.take_along_axis(
             run[:, :, 4], rho[:, None], axis=1)[:, 0].astype(jnp.int32), -1)
@@ -475,25 +493,65 @@ def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
         )(is_canon, req, res_of, tkn, hdtl, need, t, c, c_is_exec, alive)
         cand = jax.vmap(
             lambda ir, rh, al: _next_cand(sg, ir, rh, al))(i_res, rho, alive)
-        return (tkn, hdtl, run, need, cand, t, ms, n_done), None
+        return ((tkn, hdtl, run, need, cand, t, ms, n_done), trip_idx + 1)
 
-    carry = (tkn, hdtl, run, need, cand, jnp.zeros(B), jnp.zeros(B),
-             jnp.zeros(B, jnp.int32))
-    carry = jax.lax.scan(trip, carry,
-                         jnp.arange(sg.n_trips + 1, dtype=jnp.int32))[0]
+    carry, _ = jax.lax.while_loop(cond, body, (carry, jnp.int32(0)))
     ms, n_done = carry[6], carry[7]
     return ms, n_done == sg.n_compute
+
+
+@jax.jit
+def _makespan_fifo_batch_xla(sg: SimGraph, assignments):
+    """Batched :func:`makespan_fifo`: same per-trip ops as the
+    single-episode scan, vmapped, driven by the trip-trimmed
+    ``_run_trips`` loop."""
+    R = sg.nd + sg.nd * sg.nd
+    dur, is_canon, req, res_of, carry = _batch_setup(sg, assignments)
+
+    def pop(run, rows, ridx):
+        run = jax.vmap(lambda rn, ri, ro: rn.at[ri].set(ro))(run, ridx, rows)
+        rho, e1, alive = jax.vmap(_lex_pop)(run)
+        # clear only column 0; the popped task id (column 4) survives for
+        # the caller's read, exactly like the single-episode trip
+        run = jax.vmap(
+            lambda rn, rh, al: rn.at[jnp.where(al, rh, R), 0].set(F32_INF)
+        )(run, rho, alive)
+        return run, rho, e1
+
+    return _run_trips(sg, dur, is_canon, req, res_of, carry, pop)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _makespan_fifo_batch_pallas(sg: SimGraph, assignments, interpret: bool):
+    """Batched twin of :func:`makespan_fifo` whose per-trip running-table
+    work (start writes, lexicographic pop, popped-slot clear) is one fused
+    Pallas kernel over the whole episode batch instead of B vmapped
+    scatters/reductions.  Decision-exact with the XLA path: both consume
+    the same helper ops through ``_run_trips`` (including its trip
+    trimming) and the kernel is bit-pinned to kernels.wc_oracle.ref
+    (tests/test_kernels.py, tests/test_conformance.py)."""
+    R = sg.nd + sg.nd * sg.nd
+    dur, is_canon, req, res_of, carry = _batch_setup(sg, assignments)
+
+    def pop(run, rows, ridx):
+        # the kernel's drop sentinel is -1 (R would alias a padded lane)
+        return wc_step(run, rows, jnp.where(ridx < R, ridx, -1),
+                       interpret=interpret)
+
+    return _run_trips(sg, dur, is_canon, req, res_of, carry, pop)
 
 
 def makespan_fifo_batch(sg: SimGraph, assignments, backend: str = "xla",
                         interpret: bool | None = None):
     """(K, n) assignments -> ((K,) makespans, (K,) ok flags), one dispatch.
 
-    ``backend="xla"`` vmaps the single-episode scan; ``backend="pallas"``
-    routes the per-trip running-table work through the fused
-    kernels.wc_oracle step (``interpret=None`` auto-falls back to the
-    interpreter off-TPU).  Both are decision-exact twins of the serial
-    engine."""
+    ``backend="xla"`` runs the single-episode trip ops vmapped;
+    ``backend="pallas"`` routes the per-trip running-table work through
+    the fused kernels.wc_oracle step (``interpret=None`` auto-falls back
+    to the interpreter off-TPU).  Both share the trip-trimmed
+    ``_run_trips`` driver — the batch stops as soon as its longest
+    episode completes instead of always paying the static ``n_trips + 1``
+    bound — and both are decision-exact twins of the serial engine."""
     if backend == "pallas":
         if interpret is None:
             interpret = jax.default_backend() == "cpu"

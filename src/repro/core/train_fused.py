@@ -57,7 +57,8 @@ from ..train.optim import AdamState, adamw_update
 from .assign import BIG, GraphData, _device_features, _etf_update
 from .nn import apply_mlp, leaky_relu, masked_log_softmax
 from .policies import episode_encodings, plc_logits
-from .sim_jax import SimGraph, makespan_fifo, _makespan_fifo_batch_pallas
+from .sim_jax import (SimGraph, _makespan_fifo_batch_pallas,
+                      _makespan_fifo_batch_xla)
 
 
 class RewardStats(NamedTuple):
@@ -86,25 +87,51 @@ class RewardStats(NamedTuple):
                            self.r_count + rs.shape[0])
 
 
-# ------------------------------------------------------------- RNG tables
-def _episode_rng_tables(keys, n: int, nd: int):
-    """Precompute every random draw of K sampling episodes, step-major.
+# ------------------------------------------------------------- RNG stream
+def _episode_key_chain(keys, n: int):
+    """Per-step ``(kv, kd)`` pick keys for K episodes, step-major
+    ``(n, K, 2)`` each.
 
     Replays ``rollout``'s exact key chain: per step
-    ``key, kv, kd = split(key, 3)``; each ``pick`` then splits its key
-    into (categorical, uniform-categorical, bernoulli).  The categorical
-    gumbel tables reproduce ``jax.random.categorical``'s
-    ``argmax(gumbel(k, shape) + logits)`` bit-for-bit.  Tables are
-    generated directly in the scan's (step, episode, ...) layout so no
-    transpose of the big SEL table is ever materialized.
-    """
-    K = keys.shape[0]
+    ``key, kv, kd = split(key, 3)``.  The chain is inherently sequential
+    but tiny (two u32 per episode-step), so it is precomputed; the *wide*
+    per-step draws are generated inside the sampling scan body
+    (:func:`_step_draws`), so no (K, S, n) gumbel table is ever
+    materialized — the streamed-sampling half of the memory-bounded
+    engine."""
 
     def chain(ks, _):
         out = jax.vmap(lambda k: jax.random.split(k, 3))(ks)  # (K, 3, 2)
         return out[:, 0], (out[:, 1], out[:, 2])
 
     _, (kvs, kds) = jax.lax.scan(chain, keys, None, length=n)  # (n, K, 2)
+    return kvs, kds
+
+
+def _step_draws(kv_row, kd_row, n: int, nd: int):
+    """One step's categorical gumbel rows and exploration uniforms for K
+    episodes, generated on the fly from that step's pick keys.
+
+    Each ``pick`` splits its key into (categorical, uniform-categorical,
+    bernoulli); the gumbel rows reproduce ``jax.random.categorical``'s
+    ``argmax(gumbel(k, shape) + logits)`` draw bit-for-bit.  Values are
+    bit-identical to the corresponding :func:`_episode_rng_tables` slices
+    (same keys, same shapes) — only the materialization point differs."""
+    sel = jax.vmap(lambda k: jax.random.split(k, 3))(kv_row)   # (K, 3, 2)
+    plc = jax.vmap(lambda k: jax.random.split(k, 3))(kd_row)
+    gs = jax.vmap(lambda k: jax.random.gumbel(k, (n,)))(sel[:, 0])
+    gp = jax.vmap(lambda k: jax.random.gumbel(k, (nd,)))(plc[:, 0])
+    us = jax.vmap(jax.random.uniform)(sel[:, 2])
+    up = jax.vmap(jax.random.uniform)(plc[:, 2])
+    return gs, gp, us, up
+
+
+def _episode_rng_tables(keys, n: int, nd: int):
+    """Materialized step-major draw tables (kept as the reference /
+    debugging form of the stream; the sampling scan itself consumes
+    :func:`_step_draws` rows and never builds these)."""
+    K = keys.shape[0]
+    kvs, kds = _episode_key_chain(keys, n)
     sel = jax.vmap(lambda k: jax.random.split(k, 3))(kvs.reshape(-1, 2))
     plc = jax.vmap(lambda k: jax.random.split(k, 3))(kds.reshape(-1, 2))
     g_sel = jax.vmap(lambda k: jax.random.gumbel(k, (n,)))(
@@ -117,35 +144,36 @@ def _episode_rng_tables(keys, n: int, nd: int):
 
 
 # ------------------------------------------------- phase 1: record sample
-@partial(jax.jit, static_argnames=("sel_mode", "plc_mode",
-                                   "encoder_backend"))
-def sample_episodes(params, gd: GraphData, keys, eps,
-                    sel_mode: str = "learned", plc_mode: str = "learned",
-                    encoder_backend: str = "xla"):
-    """K recorded sampling episodes in one batch-explicit forward scan.
+def _sample_scan(params, gd: GraphData, keys, eps, sel_mode: str,
+                 plc_mode: str, enc, record: str):
+    """Shared recorded-sampling scan over K episodes.
 
-    Returns dict with ``actions`` (K, n, 2), ``assignment`` (K, n),
-    ``x_dev`` (K, n, nd, 5) dynamic device features per step, and the
-    SEL-linearization recordings ``sel_p`` (K, n, n) softmax rows /
-    ``sel_lse`` / ``sel_ex`` (K, n) — everything :func:`fused_pg_loss`
-    needs to recompute log-probs without a second scan.
+    ``enc`` is the precomputed ``(H, sel_logits, z_plc)`` episode
+    encodings (hoisted so a chunked caller evaluates the GNN once per
+    update, not once per chunk).  ``record`` selects what the scan emits:
 
-    Actions are **bit-identical** to ``rollout``'s for the same keys when
-    ``eps == 0`` (the parity contract with ``stage2_sim_batched``): the
-    per-step key chain and gumbel tables replay
-    ``jax.random.categorical``'s draws exactly.  With ``eps > 0`` the
-    exploration pick reuses the policy pick's gumbel row (each branch
-    stays marginally correct — only one is kept — so the sampling
-    distribution is unchanged, but the joint stream differs from the
-    serial path's independent draw; see the module docstring).
+    * ``"full"`` — the classic recordings: per-step SEL softmax rows
+      ``sel_p`` (K, S, n) plus ``sel_lse`` / ``sel_ex`` scalars, for
+      :func:`fused_pg_loss`.
+    * ``"reduced"`` — the SEL-linearization recordings pre-reduced
+      *inside the scan carry* to their (K, n) / (K,) sufficient
+      statistics (``sel_P = Σ_s p_s``, ``sel_Q = Σ_s p_s·ex_s``,
+      ``sel_lse_sum``, ``sel_ex_sum``) for
+      :func:`fused_pg_loss_reduced`; nothing O(K·S·n) is ever stacked.
+      The device-feature recording is also trimmed to its episode-dynamic
+      columns (``x_dyn``, (K, S, nd, 5)) — the trailing fleet columns are
+      the episode-static ``gd.dev_x``, re-concatenated bit-identically
+      inside the loss.
+
+    RNG is streamed: the per-step gumbel rows / uniforms are generated in
+    the scan body from the precomputed key chain (:func:`_step_draws`),
+    bit-identical to the materialized tables.
     """
     n, nd = gd.n, gd.nd
     K = keys.shape[0]
-    H, sel_logits, z_plc = episode_encodings(
-        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
-        backend=encoder_backend)
+    H, sel_logits, z_plc = enc
     dh = H.shape[1]
-    rng = _episode_rng_tables(keys, n, nd)
+    kvs, kds = _episode_key_chain(keys, n)
     feats = jax.vmap(_device_features, in_axes=(None, 0, 0, 0, 0, 0, 0))
     upd = jax.vmap(_etf_update, in_axes=(None, 0, 0, 0, 0))
     karange = jnp.arange(K)
@@ -161,10 +189,13 @@ def sample_episodes(params, gd: GraphData, keys, eps,
         (K, n + 1))
     dev_hsum = jnp.zeros((K, nd, dh), dtype=jnp.float32)
     dev_cnt = jnp.zeros((K, nd), dtype=jnp.float32)
+    acc0 = (jnp.zeros((K, n)), jnp.zeros((K, n)),
+            jnp.zeros(K), jnp.zeros(K))
 
     def step(carry, xs):
-        state = carry
-        gs, gp, us, up = xs                     # (K, n) (K, nd) (K,) (K,)
+        state, acc = carry
+        kv_row, kd_row = xs                       # (K, 2) each
+        gs, gp, us, up = _step_draws(kv_row, kd_row, n, nd)
         (placed, assigned, est_end, device_avail, dev_comp,
          unassigned_preds, dev_hsum, dev_cnt) = state
 
@@ -201,25 +232,69 @@ def sample_episodes(params, gd: GraphData, keys, eps,
         dev_cnt = dev_cnt.at[karange, d].add(1.0)
         state = (placed, assigned, est_end, device_avail, dev_comp,
                  unassigned_preds, dev_hsum, dev_cnt)
-        # record the SEL softmax row + scalars that make the SEL loss
-        # term linear in sel_logits (see fused_pg_loss)
+        # the SEL softmax row + scalars that make the SEL loss term
+        # linear in sel_logits (see fused_pg_loss)
         p_row = jnp.exp(logp_v)
         lse = (sel_logits[v]
                - jnp.take_along_axis(logp_v, v[:, None], 1)[:, 0])
         ex = (p_row * jnp.where(cand, sel_logits[None, :], 0.0)).sum(-1)
-        return state, (v, d, x_dev, p_row, lse, ex)
+        if record == "full":
+            return (state, acc), (v, d, x_dev, p_row, lse, ex)
+        selP, selQ, lse_sum, ex_sum = acc
+        acc = (selP + p_row, selQ + p_row * ex[:, None],
+               lse_sum + lse, ex_sum + ex)
+        # drop the episode-static fleet columns (gd.dev_x) — the loss
+        # re-concatenates them, so only the 5 dynamic columns are stored
+        return (state, acc), (v, d, x_dev[..., :-gd.dev_x.shape[1]])
 
     init = (placed, assigned, est_end, device_avail, dev_comp,
             unassigned_preds, dev_hsum, dev_cnt)
-    state, (v_seq, d_seq, x_devs, sel_p, sel_lse, sel_ex) = jax.lax.scan(
-        step, init, rng)
-    # step-major -> episode-major
+    (state, acc), outs = jax.lax.scan(step, (init, acc0), (kvs, kds))
+    if record == "full":
+        v_seq, d_seq, x_devs, sel_p, sel_lse, sel_ex = outs
+        # step-major -> episode-major
+        return {"actions": jnp.stack([v_seq, d_seq], -1).swapaxes(0, 1),
+                "assignment": state[1],
+                "x_dev": x_devs.swapaxes(0, 1),
+                "sel_p": sel_p.swapaxes(0, 1),
+                "sel_lse": sel_lse.swapaxes(0, 1),
+                "sel_ex": sel_ex.swapaxes(0, 1)}
+    v_seq, d_seq, x_dyns = outs
+    selP, selQ, lse_sum, ex_sum = acc
     return {"actions": jnp.stack([v_seq, d_seq], -1).swapaxes(0, 1),
             "assignment": state[1],
-            "x_dev": x_devs.swapaxes(0, 1),
-            "sel_p": sel_p.swapaxes(0, 1),
-            "sel_lse": sel_lse.swapaxes(0, 1),
-            "sel_ex": sel_ex.swapaxes(0, 1)}
+            "x_dyn": x_dyns.swapaxes(0, 1),
+            "sel_P": selP, "sel_Q": selQ,
+            "sel_lse_sum": lse_sum, "sel_ex_sum": ex_sum}
+
+
+@partial(jax.jit, static_argnames=("sel_mode", "plc_mode",
+                                   "encoder_backend"))
+def sample_episodes(params, gd: GraphData, keys, eps,
+                    sel_mode: str = "learned", plc_mode: str = "learned",
+                    encoder_backend: str = "xla"):
+    """K recorded sampling episodes in one batch-explicit forward scan.
+
+    Returns dict with ``actions`` (K, n, 2), ``assignment`` (K, n),
+    ``x_dev`` (K, n, nd, F) dynamic device features per step, and the
+    SEL-linearization recordings ``sel_p`` (K, n, n) softmax rows /
+    ``sel_lse`` / ``sel_ex`` (K, n) — everything :func:`fused_pg_loss`
+    needs to recompute log-probs without a second scan.
+
+    Actions are **bit-identical** to ``rollout``'s for the same keys when
+    ``eps == 0`` (the parity contract with ``stage2_sim_batched``): the
+    per-step key chain and streamed gumbel draws replay
+    ``jax.random.categorical``'s draws exactly.  With ``eps > 0`` the
+    exploration pick reuses the policy pick's gumbel row (each branch
+    stays marginally correct — only one is kept — so the sampling
+    distribution is unchanged, but the joint stream differs from the
+    serial path's independent draw; see the module docstring).
+    """
+    enc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
+    return _sample_scan(params, gd, keys, eps, sel_mode, plc_mode, enc,
+                        record="full")
 
 
 # ------------------------------------------- phase 2: parallel log-probs
@@ -346,6 +421,59 @@ def fused_pg_loss(params, gd: GraphData, rec, advs, entropy_w,
     return (-(advs * logp + entropy_w * ent)).mean()
 
 
+def fused_pg_loss_reduced(params, gd: GraphData, rec, advs, entropy_w,
+                          sel_learned: bool = True,
+                          plc_learned: bool = True,
+                          encoder_backend: str = "xla"):
+    """:func:`fused_pg_loss` on the pre-reduced SEL recordings.
+
+    Identical math: the SEL term of the REINFORCE surrogate only touches
+    the recordings through ``P = Σ_s p_s``, ``Q = Σ_s p_s·ex_s``,
+    ``Σ_s lse_s`` and ``Σ_s ex_s`` — sums the sampling scan already
+    accumulated in its carry (``record="reduced"``), so the (K, S, n)
+    softmax rows never exist.  Values/gradients match the full-recording
+    loss up to float summation order.  The PLC term is unchanged (its
+    recordings are O(K·S·nd)).
+    """
+    H, sel_logits, z_plc = episode_encodings(
+        params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+        backend=encoder_backend)
+    actions = rec["actions"]
+    v = actions[..., 0]                                     # (K, S)
+    d = actions[..., 1]
+    S = v.shape[1]
+
+    logp = 0.0
+    ent = 0.0
+    if sel_learned:
+        x = sel_logits
+        dx = x - jax.lax.stop_gradient(x)                   # 0-valued
+        P = jax.lax.stop_gradient(rec["sel_P"])             # (K, n)
+        Q = jax.lax.stop_gradient(rec["sel_Q"])             # (K, n)
+        lse_sum = jax.lax.stop_gradient(rec["sel_lse_sum"])
+        ex_sum = jax.lax.stop_gradient(rec["sel_ex_sum"])
+        sel_logp_sum = (x[v].sum(-1) - lse_sum
+                        - (P * dx[None, :]).sum(-1))
+        coeff = -(P * jax.lax.stop_gradient(x)[None, :] - Q) / S
+        sel_ent_mean = ((lse_sum - ex_sum) / S
+                        + (coeff * dx[None, :]).sum(-1))
+        logp = logp + sel_logp_sum
+        ent = ent + sel_ent_mean
+    if plc_learned:
+        # rebuild the full device features bit-identically: the recording
+        # keeps only the dynamic columns, the fleet tail is gd.dev_x
+        x_dyn = rec["x_dyn"]
+        x_devs = jnp.concatenate(
+            [x_dyn, jnp.broadcast_to(gd.dev_x,
+                                     x_dyn.shape[:3] + (gd.dev_x.shape[1],))],
+            axis=-1)
+        plc_logp, plc_ent = _plc_step_logps(params, H, z_plc, gd.nd,
+                                            x_devs, v, d)
+        logp = logp + plc_logp.sum(-1)
+        ent = ent + plc_ent.mean(-1)
+    return (-(advs * logp + entropy_w * ent)).mean()
+
+
 # --------------------------------------------------------- fused updates
 @dataclasses.dataclass(frozen=True)
 class FusedStage2Config:
@@ -355,7 +483,16 @@ class FusedStage2Config:
     kernels.gnn_mp); ``oracle_backend`` routes the batched WC reward
     oracle ("xla" | "pallas" kernels.wc_oracle).  Both default to the
     reference XLA paths and are decision-exactness-pinned by the
-    conformance/property suites."""
+    conformance/property suites.
+
+    ``chunk_size`` bounds peak memory at large batch: the per-shard
+    episode batch is sampled and scored in micro-chunks of this size
+    (``None`` auto-chunks when the shard exceeds 64 episodes, with
+    chunks of at most 128; ``0`` forces the monolithic engine).
+    ``grad_chunk_size`` is the gradient
+    accumulation micro-chunk (``None`` = auto, ≤ 64); the accumulated
+    gradient equals the monolithic batch gradient up to float summation
+    order (parity-tested at 1e-6)."""
     batch_size: int
     updates: int                  # scan length of one dispatch
     sel_mode: str = "learned"
@@ -366,11 +503,32 @@ class FusedStage2Config:
     entropy_weight: float = 1e-2
     encoder_backend: str = "xla"
     oracle_backend: str = "xla"
+    chunk_size: int | None = None
+    grad_chunk_size: int | None = None
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``cap`` (≥ 1)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+# auto-chunk threshold: shards up to AUTO_CHUNK episodes stay on the
+# monolithic engine (bit-compatible with the pre-chunking path); larger
+# shards switch to the reduced-recording engine, sampled/scored in
+# micro-chunks of at most AUTO_CHUNK_CAP episodes.  The threshold sits
+# below the cap so a 128-episode shard — where the monolithic
+# (K, S, n) SEL recording already costs ~140 MB on a 512-vertex graph —
+# runs reduced even though it fits in a single micro-chunk.
+AUTO_CHUNK = 64
+AUTO_CHUNK_CAP = 128
 
 
 def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
                        sg: SimGraph, lr_sched, eps_sched,
-                       n_devices: int = 1):
+                       n_devices: int = 1, spmd: str = "shard_map"):
     """Compile a ``train_chunk(params, opt, rstats, key, episode)`` that
     runs ``cfg.updates`` fused Stage-II updates in one XLA dispatch.
 
@@ -381,42 +539,70 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
     ``max(running std, batch std)`` normalizer, and the running stats are
     updated after the gradient — see ``DopplerTrainer.stage2_sim_batched``.
 
-    With ``n_devices > 1`` the chunk is ``pmap``-ed: every device carries
-    replicated policy/optimizer state, samples and scores its
-    ``batch_size / n_devices`` episode shard, and the gradient /
-    advantage statistics are combined with ``pmean``/``psum`` collectives
-    — the fused engine's data-parallel scale-out (the same episode keys
-    are drawn, so the sampled population is identical to the
-    single-device path; only float reduction order differs).
+    **Chunking** (``cfg.chunk_size``): large shards are processed in two
+    memory-bounded passes — a ``lax.map`` over sampling micro-chunks
+    (streamed RNG, pre-reduced SEL recordings, per-chunk trip-trimmed
+    oracle), then advantages over the full batch, then a donated-carry
+    gradient-accumulation ``lax.scan`` over grad micro-chunks.  The
+    sampled trajectories are bit-identical to the monolithic engine's
+    (same per-episode key chain); the accumulated gradient matches to
+    float summation order.
+
+    **Sharding**: with ``n_devices > 1`` every device carries replicated
+    policy/optimizer state, samples and scores its ``batch_size /
+    n_devices`` episode shard, and gradients / advantage statistics are
+    combined with a single fused ``pmean`` all-reduce over the flattened
+    gradient vector.  ``spmd="shard_map"`` (default) lowers through
+    ``jax.experimental.shard_map`` with donated buffers; ``spmd="pmap"``
+    keeps the legacy per-device dispatch (bit-parity-tested against
+    shard_map).  The same episode keys are drawn in either mode, so the
+    sampled population is identical to the single-device path; only
+    float reduction order differs.
+
+    Every update also returns the oracle validity flags (``oracle_ok``):
+    non-converged episodes have their advantage masked to zero in-update
+    and the host trainer raises — garbage makespans are never trained on
+    silently.
     """
     if cfg.batch_size % n_devices:
         raise ValueError(f"batch_size {cfg.batch_size} not divisible by "
                          f"{n_devices} devices")
+    if spmd not in ("shard_map", "pmap"):
+        raise ValueError(f"unknown spmd mode {spmd!r}")
     kb = cfg.batch_size // n_devices
-    pmapped = n_devices > 1
+    sharded = n_devices > 1
     # resolve the Pallas interpret fallback once, at build time (a traced
     # value cannot pick it; jit re-specializes if the backend changes)
     oracle_interpret = jax.default_backend() == "cpu"
 
-    def one_update(carry, _):
-        params, opt_state, rstats, key, episode = carry
-        key, sub = jax.random.split(key)
-        eps = eps_sched(episode)
-        keys = jax.random.split(sub, cfg.batch_size)
-        if pmapped:
-            keys = jax.lax.dynamic_slice_in_dim(
-                keys, jax.lax.axis_index("batch") * kb, kb)
-        rec = sample_episodes(params, gd, keys, eps,
-                              sel_mode=cfg.sel_mode, plc_mode=cfg.plc_mode,
-                              encoder_backend=cfg.encoder_backend)
+    # ---- micro-chunk resolution (None = auto, 0 = force monolithic)
+    if cfg.chunk_size is None:
+        sc = (_largest_divisor(kb, AUTO_CHUNK_CAP)
+              if kb > AUTO_CHUNK else None)
+    elif cfg.chunk_size <= 0:
+        sc = None
+    else:
+        if kb % cfg.chunk_size:
+            raise ValueError(f"chunk_size {cfg.chunk_size} does not divide "
+                             f"the per-device batch {kb}")
+        sc = cfg.chunk_size
+    if sc is not None:
+        gc = cfg.grad_chunk_size or _largest_divisor(kb, min(sc, 64))
+        if kb % gc:
+            raise ValueError(f"grad_chunk_size {gc} does not divide "
+                             f"the per-device batch {kb}")
+        nsc, ngc = kb // sc, kb // gc
+
+    def oracle(assignments):
         if cfg.oracle_backend == "pallas":
-            ms, _ok = _makespan_fifo_batch_pallas(sg, rec["assignment"],
-                                                  oracle_interpret)
-        else:
-            ms, _ok = jax.vmap(lambda a: makespan_fifo(sg, a))(
-                rec["assignment"])
-        rs = jax.lax.stop_gradient(-ms)
-        if pmapped:
+            return _makespan_fifo_batch_pallas(sg, assignments,
+                                               oracle_interpret)
+        return _makespan_fifo_batch_xla(sg, assignments)
+
+    def advantages(rs, rstats):
+        """Running-baseline advantages + post-update stats, with the
+        cross-shard batch moments pmean-combined when sharded."""
+        if sharded:
             batch_mean = jax.lax.pmean(rs.mean(), "batch")
             batch_sq = jax.lax.pmean((rs * rs).mean(), "batch")
             batch_std = jnp.sqrt(jnp.maximum(
@@ -427,14 +613,13 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
         advs = rs - jnp.where(rstats.r_count > 0, mean, batch_mean)
         if cfg.normalize_adv:
             advs = advs / (jnp.maximum(std, batch_std) + 1e-9)
-        advs = jax.lax.stop_gradient(advs)
+        return jax.lax.stop_gradient(advs)
 
-        loss, grads = jax.value_and_grad(fused_pg_loss)(
-            params, gd, rec, advs, jnp.float32(cfg.entropy_weight),
-            sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned,
-            encoder_backend=cfg.encoder_backend)
-        if pmapped:
-            # one fused all-reduce: flattened grads + loss + reward sums
+    def all_reduce_and_step(params, opt_state, rstats, grads, loss, rs,
+                            episode):
+        """AdamW step, with the sharded case folding the flattened grads
+        + loss + reward sums into one fused pmean all-reduce."""
+        if sharded:
             flat, unravel = ravel_pytree(grads)
             flat = jnp.concatenate([
                 flat, jnp.stack([loss, rs.sum(), (rs * rs).sum()])])
@@ -449,43 +634,165 @@ def build_fused_stage2(cfg: FusedStage2Config, gd: GraphData,
             rstats = rstats.update(rs)
         params, opt_state = adamw_update(grads, opt_state, params,
                                          lr_sched(episode))
+        return params, opt_state, rstats, loss
+
+    def shard_keys(sub):
+        keys = jax.random.split(sub, cfg.batch_size)
+        if sharded:
+            keys = jax.lax.dynamic_slice_in_dim(
+                keys, jax.lax.axis_index("batch") * kb, kb)
+        return keys
+
+    def one_update_monolithic(carry, _):
+        params, opt_state, rstats, key, episode = carry
+        key, sub = jax.random.split(key)
+        eps = eps_sched(episode)
+        rec = sample_episodes(params, gd, shard_keys(sub), eps,
+                              sel_mode=cfg.sel_mode, plc_mode=cfg.plc_mode,
+                              encoder_backend=cfg.encoder_backend)
+        ms, ok = oracle(rec["assignment"])
+        rs = jax.lax.stop_gradient(jnp.where(ok, -ms, 0.0))
+        advs = jnp.where(ok, advantages(rs, rstats), 0.0)
+
+        loss, grads = jax.value_and_grad(fused_pg_loss)(
+            params, gd, rec, advs, jnp.float32(cfg.entropy_weight),
+            sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned,
+            encoder_backend=cfg.encoder_backend)
+        params, opt_state, rstats, loss = all_reduce_and_step(
+            params, opt_state, rstats, grads, loss, rs, episode)
         episode = episode + cfg.batch_size
-        # ship only this shard's best assignment back to the host
-        best_k = jnp.argmin(ms)
+        # ship only this shard's best (valid) assignment back to the host
+        best_k = jnp.argmin(jnp.where(ok, ms, jnp.inf))
         return ((params, opt_state, rstats, key, episode),
-                (ms, rec["assignment"][best_k], loss))
+                (ms, ok, rec["assignment"][best_k], loss))
+
+    def one_update_chunked(carry, _):
+        params, opt_state, rstats, key, episode = carry
+        key, sub = jax.random.split(key)
+        eps = eps_sched(episode)
+        keys = shard_keys(sub)
+        enc = episode_encodings(
+            params, gd.x, gd.edges, gd.edge_feat, gd.b_path, gd.t_path,
+            backend=cfg.encoder_backend)
+
+        # ---- pass 1: sample + score, O(chunk) working set per chunk
+        def score_chunk(ck):
+            rec = _sample_scan(params, gd, ck, eps, cfg.sel_mode,
+                               cfg.plc_mode, enc, record="reduced")
+            ms, ok = oracle(rec["assignment"])
+            return {**rec, "ms": ms, "ok": ok}
+
+        recs = jax.lax.map(score_chunk, keys.reshape(nsc, sc, 2))
+        ms = recs.pop("ms").reshape(kb)
+        ok = recs.pop("ok").reshape(kb)
+        rs = jax.lax.stop_gradient(jnp.where(ok, -ms, 0.0))
+        advs = jnp.where(ok, advantages(rs, rstats), 0.0)
+
+        # ---- pass 2: donated-carry gradient accumulation over chunks
+        recs = {k: v.reshape((ngc, gc) + v.shape[2:])
+                for k, v in recs.items()}
+
+        def grad_chunk(carry, xs):
+            gsum, lsum = carry
+            rec_c, adv_c = xs
+            loss_c, grads_c = jax.value_and_grad(fused_pg_loss_reduced)(
+                params, gd, rec_c, adv_c, jnp.float32(cfg.entropy_weight),
+                sel_learned=cfg.sel_learned, plc_learned=cfg.plc_learned,
+                encoder_backend=cfg.encoder_backend)
+            return (jax.tree_util.tree_map(jnp.add, gsum, grads_c),
+                    lsum + loss_c), None
+
+        gz = jax.tree_util.tree_map(jnp.zeros_like, params)
+        (gsum, lsum), _ = jax.lax.scan(
+            grad_chunk, (gz, jnp.float32(0.0)),
+            (recs, advs.reshape(ngc, gc)))
+        # equal chunk sizes: mean of chunk means == batch mean
+        grads = jax.tree_util.tree_map(lambda g: g / ngc, gsum)
+        loss = lsum / ngc
+
+        params, opt_state, rstats, loss = all_reduce_and_step(
+            params, opt_state, rstats, grads, loss, rs, episode)
+        episode = episode + cfg.batch_size
+        assignment = recs["assignment"].reshape(kb, gd.n)
+        best_k = jnp.argmin(jnp.where(ok, ms, jnp.inf))
+        return ((params, opt_state, rstats, key, episode),
+                (ms, ok, assignment[best_k], loss))
+
+    one_update = one_update_monolithic if sc is None else one_update_chunked
 
     def chunk(params, opt_state: AdamState, rstats: RewardStats,
               key, episode, _dev_dummy=None):
         carry = (params, opt_state, rstats, key, episode)
-        carry, (ms, best_a, losses) = jax.lax.scan(
+        carry, (ms, ok, best_a, losses) = jax.lax.scan(
             one_update, carry, None, length=cfg.updates)
         params, opt_state, rstats, key, episode = carry
         return {"params": params, "opt_state": opt_state, "rstats": rstats,
                 "key": key, "episode": episode, "makespans": ms,
-                "best_assignments": best_a, "losses": losses}
+                "oracle_ok": ok, "best_assignments": best_a,
+                "losses": losses}
 
-    if not pmapped:
-        return jax.jit(lambda p, o, r, k, e: chunk(p, o, r, k, e))
+    # buffer donation is a no-op (with a warning) on the CPU backend
+    donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
 
-    inner = jax.pmap(chunk, axis_name="batch",
-                     in_axes=(None, None, None, None, None, 0),
-                     devices=jax.local_devices()[:n_devices])
-    dev_dummy = jnp.arange(n_devices)
+    if not sharded:
+        return jax.jit(lambda p, o, r, k, e: chunk(p, o, r, k, e),
+                       donate_argnums=donate)
+
+    if spmd == "pmap":
+        inner = jax.pmap(chunk, axis_name="batch",
+                         in_axes=(None, None, None, None, None, 0),
+                         devices=jax.local_devices()[:n_devices])
+        dev_dummy = jnp.arange(n_devices)
+
+        def sharded_chunk(params, opt_state, rstats, key, episode):
+            out = inner(params, opt_state, rstats, key, episode, dev_dummy)
+            # replicated leaves -> first copy; per-device episode shards
+            # -> episode-major makespans + the globally best shard row
+            first = jax.tree_util.tree_map(lambda x: x[0], out)
+            ms = out["makespans"]                       # (ndev, U, kb)
+            first["makespans"] = jnp.concatenate(
+                [ms[d] for d in range(n_devices)], axis=1)
+            first["oracle_ok"] = jnp.concatenate(
+                [out["oracle_ok"][d] for d in range(n_devices)], axis=1)
+            windev = jnp.argmin(
+                jnp.where(out["oracle_ok"], ms, jnp.inf).min(axis=2),
+                axis=0)                                 # (U,)
+            first["best_assignments"] = jnp.take_along_axis(
+                out["best_assignments"], windev[None, :, None], axis=0)[0]
+            first["losses"] = out["losses"][0]
+            return first
+
+        return sharded_chunk
+
+    # ---- shard_map: replicated state in/out, episode-sharded outputs
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    P = PartitionSpec
+    mesh = Mesh(np.array(jax.local_devices()[:n_devices]), ("batch",))
+    out_specs = {"params": P(), "opt_state": P(), "rstats": P(),
+                 "key": P(), "episode": P(), "losses": P(),
+                 "makespans": P(None, "batch"),      # (U, K) episode-major
+                 "oracle_ok": P(None, "batch"),
+                 "best_assignments": P("batch")}     # (ndev*U, n)
+    inner = jax.jit(shard_map(
+        lambda p, o, r, k, e: chunk(p, o, r, k, e), mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()), out_specs=out_specs,
+        check_rep=False), donate_argnums=donate)
 
     def sharded_chunk(params, opt_state, rstats, key, episode):
-        out = inner(params, opt_state, rstats, key, episode, dev_dummy)
-        # replicated leaves -> first copy; per-device episode shards ->
-        # episode-major makespans + the globally best shard row
-        first = jax.tree_util.tree_map(lambda x: x[0], out)
-        ms = out["makespans"]                       # (ndev, U, kb)
-        first["makespans"] = jnp.concatenate(
-            [ms[d] for d in range(n_devices)], axis=1)
-        windev = jnp.argmin(ms.min(axis=2), axis=0)             # (U,)
-        first["best_assignments"] = jnp.take_along_axis(
-            out["best_assignments"], windev[None, :, None], axis=0)[0]
-        first["losses"] = out["losses"][0]
-        return first
+        out = inner(params, opt_state, rstats, key, episode)
+        ms = out["makespans"]                           # (U, K)
+        ok = out["oracle_ok"]
+        U = ms.shape[0]
+        # per-shard best rows stacked shard-major -> pick the global best
+        best = out["best_assignments"].reshape(n_devices, U, gd.n)
+        shard_best = jnp.where(ok, ms, jnp.inf).reshape(
+            U, n_devices, kb).min(axis=2)               # (U, ndev)
+        windev = jnp.argmin(shard_best, axis=1)
+        out["best_assignments"] = jnp.take_along_axis(
+            best, windev[None, :, None], axis=0)[0]
+        return out
 
     return sharded_chunk
 

@@ -409,6 +409,8 @@ class DopplerTrainer:
     def stage2_fused(self, n_updates: int, batch_size: int = 8,
                      updates_per_dispatch: int | None = None,
                      log_every: int = 0, n_devices: int | None = None,
+                     chunk_size: int | None = None,
+                     grad_chunk_size: int | None = None,
                      **ablation):
         """Device-resident Stage II: rollout, reward oracle, advantage,
         gradient, and AdamW fused into one jitted step, scanned
@@ -420,7 +422,15 @@ class DopplerTrainer:
         samples the exact same episodes for the same seeds (bit-identical
         at eps=0) and is the cross-check in tests/test_train_fused.py.
         `n_devices > 1` shards the episode batch across XLA devices
-        (data-parallel fused updates, pmean-combined gradients)."""
+        (data-parallel fused updates, single fused pmean all-reduce via
+        shard_map).  `chunk_size` bounds peak memory at large batch by
+        sampling/scoring in micro-chunks and accumulating the gradient
+        (None auto-chunks per-device batches above 64 episodes; 0
+        forces the monolithic engine); `grad_chunk_size` sizes the
+        gradient-accumulation micro-chunk (None = auto).  The engine
+        raises RuntimeError if the WC oracle flags any episode as
+        non-converged (the flags also mask those episodes' advantages
+        in-update, so no garbage makespan reaches the gradient)."""
         from .sim_jax import SimGraph
         from .train_fused import (FusedStage2Config, RewardStats,
                                   build_fused_stage2)
@@ -437,7 +447,8 @@ class DopplerTrainer:
             normalize_adv=self.normalize_adv,
             entropy_weight=self.entropy_weight,
             encoder_backend=self.encoder_backend,
-            oracle_backend=self.oracle_backend)
+            oracle_backend=self.oracle_backend,
+            chunk_size=chunk_size, grad_chunk_size=grad_chunk_size)
         cache = getattr(self, "_fused_cache", None)
         if cache is None:
             cache = self._fused_cache = {}
@@ -468,6 +479,13 @@ class DopplerTrainer:
             else:
                 out = chunk(self.params, self.opt_state, rstats,
                             self.key, jnp.int32(self.episode))
+            ok = np.asarray(out["oracle_ok"])             # (u, K)
+            if not ok.all():
+                raise RuntimeError(
+                    f"WC oracle failed to converge on "
+                    f"{int((~ok).sum())}/{ok.size} episodes (deadlock); "
+                    f"their advantages were masked in-update and the "
+                    f"dispatch result was discarded")
             self.params = out["params"]
             self.opt_state = out["opt_state"]
             self.key = out["key"]

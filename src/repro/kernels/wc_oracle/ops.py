@@ -7,6 +7,13 @@ single-episode path in core.sim_jax).  The wrapper owns the layout work:
 transpose the (B, R, 6) table column-major, pad columns 6 -> 8, lanes
 R -> multiple of 128 (padded lanes get end = +inf so they never win a
 pop), batch B -> multiple of block_b, then slice everything back.
+
+The production caller is ``core.sim_jax._run_trips``: a batch-level
+``while_loop`` that invokes one ``wc_step`` per trip and exits as soon
+as every episode in the batch has completed (trip trimming).  A drained
+episode's step is a no-op (its pop returns e1 = +inf, so the returned
+``rho`` row is dead and the caller masks on ``isfinite(e1)``), which is
+what makes the early exit decision-exact.
 """
 from __future__ import annotations
 

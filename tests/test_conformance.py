@@ -167,6 +167,55 @@ def test_oracle_backend_validation():
         JaxOracleEngine(g, dev, backend="tpu")
 
 
+# ----------------------------------------------- trip-trimmed batch loop
+def test_trip_trimmed_batch_decision_exact():
+    """The batched oracle's early-exit trip loop (stop when every episode
+    has completed, instead of always paying the static n_trips + 1
+    bound) is decision-exact: a batch mixing episodes with very
+    different completion counts — an all-on-one-device assignment has no
+    transfer tasks, random spread assignments have many — reproduces the
+    per-episode single-scan makespans exactly, on both backends."""
+    import jax.numpy as jnp
+
+    from repro.core.sim_jax import (SimGraph, makespan_fifo,
+                                    makespan_fifo_batch)
+
+    g, dev = make_diamond(8), uniform_box(4)
+    sg = SimGraph.build(g, dev)
+    rng = np.random.default_rng(11)
+    A = np.concatenate([np.zeros((1, g.n), np.int64),
+                        rng.integers(0, dev.n, (5, g.n))])
+    singles = np.asarray([float(makespan_fifo(sg, jnp.asarray(a))[0])
+                          for a in A], np.float32)
+    for backend in ("xla", "pallas"):
+        ms, ok = makespan_fifo_batch(sg, jnp.asarray(A), backend=backend)
+        assert np.asarray(ok).all()
+        np.testing.assert_array_equal(np.asarray(ms), singles)
+
+
+def test_oracle_ok_flag_flags_starved_trip_loop():
+    """Both batched backends and the single-episode scan must report
+    ok=False (not a garbage makespan) when the trip budget is too small
+    to drain the heap — the condition the fused trainer surfaces as a
+    RuntimeError."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.sim_jax import (SimGraph, makespan_fifo,
+                                    makespan_fifo_batch)
+
+    g, dev = make_diamond(4), uniform_box(2)
+    starved = dataclasses.replace(SimGraph.build(g, dev), n_trips=1)
+    A = np.random.default_rng(3).integers(0, dev.n, (3, g.n))
+    for backend in ("xla", "pallas"):
+        ms, ok = makespan_fifo_batch(starved, jnp.asarray(A),
+                                     backend=backend)
+        assert not np.asarray(ok).any()
+    _, ok1 = makespan_fifo(starved, jnp.asarray(A[0]))
+    assert not bool(ok1)
+
+
 def test_encoder_backend_on_olmo_segment_graph():
     """The gnn_mp Pallas encoder matches the XLA encoder to <= 1e-5 on
     the full-model coarsening target: model:olmo_1b:full segment graphs

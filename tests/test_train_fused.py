@@ -9,6 +9,13 @@ trainer bookkeeping (episode counter, running reward stats, best-so-far,
 history) stays in lockstep.  Plus the fused Stage-I imitation path and
 the Table-3 ablation plumbing of `_pg_loss_and_grad_batch`.
 """
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,9 +24,10 @@ import pytest
 from conftest import make_diamond
 from repro.core.assign import build_graph_data, rollout_batch
 from repro.core.devices import uniform_box
-from repro.core.policies import init_policies
+from repro.core.policies import episode_encodings, init_policies
 from repro.core.simulator import WCSimulator
-from repro.core.train_fused import fused_pg_loss, sample_episodes
+from repro.core.train_fused import (_sample_scan, fused_pg_loss,
+                                    fused_pg_loss_reduced, sample_episodes)
 from repro.core.training import (DopplerTrainer, FleetTrainer,
                                  _pg_loss_and_grad_batch)
 
@@ -75,6 +83,152 @@ def test_fused_gradient_matches_replay(diamond, dev4):
                     jax.tree_util.tree_leaves(g_fus)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=5e-6)
+
+
+# ------------------------------------- chunked / reduced engine parity
+def _reduced_recordings(params, gd, keys):
+    enc = episode_encodings(params, gd.x, gd.edges, gd.edge_feat,
+                            gd.b_path, gd.t_path, backend="xla")
+    return _sample_scan(params, gd, keys, jnp.float32(0.0), "learned",
+                        "learned", enc, record="reduced")
+
+
+def test_reduced_recordings_match_full(diamond, dev4):
+    """record='reduced' samples the same episodes as record='full' and its
+    trimmed x_dyn recording is exactly x_dev's dynamic columns; the
+    reduced loss matches the full loss/gradient to float-order
+    tolerance."""
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=16)
+    keys = jax.random.split(jax.random.PRNGKey(3), 8)
+    rec_full = sample_episodes(params, gd, keys, jnp.float32(0.0))
+    rec_red = _reduced_recordings(params, gd, keys)
+    np.testing.assert_array_equal(np.asarray(rec_red["actions"]),
+                                  np.asarray(rec_full["actions"]))
+    np.testing.assert_array_equal(
+        np.asarray(rec_red["x_dyn"]),
+        np.asarray(rec_full["x_dev"][..., :-gd.dev_x.shape[1]]))
+    advs = jnp.linspace(-1.0, 1.0, 8)
+    l_f, g_f = jax.value_and_grad(fused_pg_loss)(
+        params, gd, rec_full, advs, jnp.float32(1e-2))
+    l_r, g_r = jax.value_and_grad(fused_pg_loss_reduced)(
+        params, gd, rec_red, advs, jnp.float32(1e-2))
+    assert float(l_r) == pytest.approx(float(l_f), abs=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(g_f),
+                    jax.tree_util.tree_leaves(g_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6)
+
+
+def test_chunked_gradient_parity(diamond, dev4):
+    """Gradient accumulated over equal micro-chunks == the monolithic
+    batch gradient to <= 1e-6, pre-optimizer (mean of chunk means is the
+    batch mean — the contract the chunked engine's accumulation scan
+    relies on)."""
+    gd = build_graph_data(diamond, dev4)
+    params = init_policies(jax.random.PRNGKey(0), d_hidden=16)
+    keys = jax.random.split(jax.random.PRNGKey(4), 16)
+    rec = _reduced_recordings(params, gd, keys)
+    advs = jnp.linspace(-1.0, 1.0, 16)
+    grad = jax.jit(jax.grad(fused_pg_loss_reduced))
+    g_full = grad(params, gd, rec, advs, jnp.float32(1e-2))
+    gc = 4
+    g_sum = None
+    for c in range(16 // gc):
+        sl = slice(c * gc, (c + 1) * gc)
+        rec_c = {k: v[sl] for k, v in rec.items()}
+        g_c = grad(params, gd, rec_c, advs[sl], jnp.float32(1e-2))
+        g_sum = g_c if g_sum is None else jax.tree_util.tree_map(
+            jnp.add, g_sum, g_c)
+    for a, b in zip(jax.tree_util.tree_leaves(g_full),
+                    jax.tree_util.tree_leaves(g_sum)):
+        np.testing.assert_allclose(np.asarray(b) / (16 // gc),
+                                   np.asarray(a), atol=1e-6)
+
+
+def test_stage2_fused_chunked_matches_monolithic(diamond, dev4):
+    """Trainer-level: explicit micro-chunking reproduces the monolithic
+    engine's episode stream bit-for-bit (same keys, same gumbel draws,
+    same oracle decisions) and lands on the same params."""
+    def run(cs, gc):
+        tr = make_trainer(diamond, dev4, eps0=0.0, eps1=0.0)
+        t = tr.stage2_fused(2, batch_size=8, updates_per_dispatch=2,
+                            chunk_size=cs, grad_chunk_size=gc)
+        return np.asarray(t), tr.params
+
+    t_c, p_c = run(4, 4)
+    t_m, p_m = run(0, None)
+    np.testing.assert_array_equal(t_c, t_m)
+    for a, b in zip(jax.tree_util.tree_leaves(p_c),
+                    jax.tree_util.tree_leaves(p_m)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-3)
+
+
+def test_stage2_fused_raises_on_nonconverged_oracle(diamond, dev4):
+    """The Pallas/XLA oracle validity flag must surface: a sim graph
+    doctored to starve the trip loop (n_trips too small to drain the
+    heap) makes every episode non-converged, and the dispatch raises
+    instead of training on garbage makespans."""
+    from repro.core.sim_jax import SimGraph
+
+    tr = make_trainer(diamond, dev4)
+    sg = SimGraph.build(diamond, dev4)
+    tr._fused_cache = {"sim_graph": dataclasses.replace(sg, n_trips=1)}
+    with pytest.raises(RuntimeError, match="converge"):
+        tr.stage2_fused(2, batch_size=4, updates_per_dispatch=2)
+
+
+def test_shard_map_matches_pmap_two_devices():
+    """Same-seed trajectory bit-parity: the shard_map engine (single
+    fused all-reduce, donated buffers) vs the legacy pmap engine on two
+    forced host devices.  Subprocess: the device count must be baked
+    into XLA_FLAGS before jax initializes."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    code = textwrap.dedent("""
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from conftest import make_diamond
+        from repro.core.devices import uniform_box
+        from repro.core.sim_jax import SimGraph
+        from repro.core.train_fused import (FusedStage2Config, RewardStats,
+                                            build_fused_stage2)
+        from repro.core.training import DopplerTrainer
+
+        assert jax.local_device_count() == 2
+        g, dev = make_diamond(8), uniform_box(4)
+
+        def run(spmd):
+            tr = DopplerTrainer(g, dev, seed=0, d_hidden=16,
+                                total_episodes=200)
+            fn = build_fused_stage2(
+                FusedStage2Config(batch_size=8, updates=2), tr.gd,
+                SimGraph.build(g, dev), tr.lr_sched, tr.eps_sched,
+                n_devices=2, spmd=spmd)
+            return fn(tr.params, tr.opt_state,
+                      RewardStats.make(0.0, 0.0, 0), tr.key, jnp.int32(0))
+
+        a, b = run("shard_map"), run("pmap")
+        assert np.array_equal(np.asarray(a["makespans"]),
+                              np.asarray(b["makespans"]))
+        assert np.array_equal(np.asarray(a["oracle_ok"]),
+                              np.asarray(b["oracle_ok"]))
+        for x, y in zip(jax.tree_util.tree_leaves(a["params"]),
+                        jax.tree_util.tree_leaves(b["params"])):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        print("SPMD_PARITY_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root / "tests"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SPMD_PARITY_OK" in proc.stdout
 
 
 # -------------------------------------------------- fused vs reference

@@ -1,39 +1,76 @@
-"""Warn-only throughput guard: fresh BENCH_<tag>.json vs the committed
-baseline.
+"""Throughput guard: fresh BENCH_<tag>.json vs the committed baseline.
 
 CI runs the benchmark suite on shared boxes whose wall-clock jitters far
-too much for a hard perf gate, so this tool *never* fails the build for
-being slow — it prints a loud ``::warning`` (GitHub-annotation syntax)
-for every rate-style metric (``upd_per_sec``, ``eps_per_sec``, ...)
-that regressed beyond the tolerance, and for rows that disappeared.
-It exits non-zero only on *structural* problems (missing/corrupt JSON),
-which indicate the benchmark itself broke.
+too much for a hard perf gate, so by default this tool *never* fails the
+build for being slow — it prints a loud ``::warning`` (GitHub-annotation
+syntax) for every regression and exits non-zero only on *structural*
+problems (missing/corrupt JSON), which indicate the benchmark itself
+broke.  ``--strict`` upgrades regressions to a non-zero exit for hosts
+with stable clocks.
+
+Three checks run:
+
+1. **Baseline rates** — every rate-style metric (``upd_per_sec``,
+   ``eps_per_sec``, ...) in the baseline must be within ``tolerance`` of
+   the fresh run's, and no baseline row may disappear.
+2. **Per-episode rates** — each row's episodes/sec is derived
+   (``eps_per_sec`` directly, else ``upd_per_sec * batch``) and compared
+   against the baseline row's.  This catches the failure mode raw
+   ``upd_per_sec`` hides: a batch-2048 row whose update rate looks
+   "fine" while its per-episode throughput collapsed.
+3. **Scaling sanity (intra-run)** — within the fresh run, every
+   ``train_<tag>_fused_b{K}`` large-batch row must keep at least
+   ``1 - tolerance`` of the per-episode rate of its small-batch
+   ``train_<tag>_fused`` anchor.  Large batches exist to *increase*
+   episode throughput; a large-batch row running slower per episode
+   than the anchor means chunking/sharding regressed, whatever the
+   baseline file says.
+
+The verdict (``ok`` | ``regression`` plus the warning list) is written
+back into the fresh BENCH JSON under a top-level ``guard`` key, so the
+committed perf trajectory records whether each run passed its own gate.
 
 Usage::
 
     python tools/bench_guard.py BENCH_train.json baseline/BENCH_train.json
-    python tools/bench_guard.py --tolerance 0.4 BENCH_train.json BENCH_train.json
+    python tools/bench_guard.py --tolerance 0.4 --strict current.json base.json
 
 Tolerance is the allowed fractional drop: 0.3 means warn when a rate
-falls below 70% of baseline.
+falls below 70% of the reference.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 RATE_KEYS = ("upd_per_sec", "eps_per_sec", "calls_per_sec", "rows_per_sec")
+_LARGE_BATCH_RE = re.compile(r"^(train_.+_fused)_b(\d+)$")
 
 
-def load_rows(path: str) -> dict[str, dict]:
+def load_doc(path: str) -> dict:
     with open(path) as f:
-        doc = json.load(f)
+        return json.load(f)
+
+
+def rows_of(doc: dict) -> dict[str, dict]:
     return {r["name"]: r.get("derived", {}) for r in doc.get("rows", [])}
+
+
+def eps_rate(derived: dict) -> float | None:
+    """Per-episode throughput of a row: explicit ``eps_per_sec``, else
+    ``upd_per_sec * batch`` when both are present."""
+    if "eps_per_sec" in derived:
+        return float(derived["eps_per_sec"])
+    if "upd_per_sec" in derived and "batch" in derived:
+        return float(derived["upd_per_sec"]) * float(derived["batch"])
+    return None
 
 
 def compare(current: dict[str, dict], baseline: dict[str, dict],
             tolerance: float) -> list[str]:
+    """Checks 1 + 2: baseline rate keys and derived per-episode rates."""
     warnings = []
     for name, base_derived in sorted(baseline.items()):
         if name not in current:
@@ -53,7 +90,56 @@ def compare(current: dict[str, dict], baseline: dict[str, dict],
                     f"{name}: {key} {cur:.2f} is {cur / base:.0%} of "
                     f"baseline {base:.2f} (warn below "
                     f"{1.0 - tolerance:.0%})")
+        base_eps = eps_rate(base_derived)
+        if (base_eps and base_eps > 0
+                and "eps_per_sec" not in base_derived):
+            # derived-only rate (upd_per_sec * batch): not covered by the
+            # RATE_KEYS loop above, compare it explicitly
+            cur_eps = eps_rate(cur_derived) or 0.0
+            if cur_eps < base_eps * (1.0 - tolerance):
+                warnings.append(
+                    f"{name}: derived eps/sec {cur_eps:.1f} is "
+                    f"{cur_eps / base_eps:.0%} of baseline "
+                    f"{base_eps:.1f}")
     return warnings
+
+
+def check_scaling(current: dict[str, dict], tolerance: float) -> list[str]:
+    """Check 3: large-batch fused rows vs their small-batch anchor,
+    within the fresh run only (host-relative, immune to baseline skew)."""
+    warnings = []
+    for name in sorted(current):
+        m = _LARGE_BATCH_RE.match(name)
+        if not m:
+            continue
+        anchor = m.group(1)
+        if anchor not in current:
+            continue
+        a_eps = eps_rate(current[anchor])
+        c_eps = eps_rate(current[name])
+        if not a_eps or c_eps is None:
+            continue
+        if c_eps < a_eps * (1.0 - tolerance):
+            warnings.append(
+                f"{name}: per-episode rate {c_eps:.1f} eps/s fell below "
+                f"{1.0 - tolerance:.0%} of the batch-"
+                f"{current[anchor].get('batch', '?')} anchor's "
+                f"{a_eps:.1f} eps/s — large-batch scaling regressed")
+    return warnings
+
+
+def record_verdict(path: str, doc: dict, verdict: str,
+                   warnings: list[str], tolerance: float,
+                   baseline_path: str, checked: int) -> None:
+    doc["guard"] = {"verdict": verdict, "tolerance": tolerance,
+                    "baseline": baseline_path, "rows_checked": checked,
+                    "warnings": warnings}
+    try:
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+    except OSError as e:        # read-only checkout: verdict still printed
+        print(f"bench_guard: could not write verdict into {path}: {e}",
+              file=sys.stderr)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -62,23 +148,32 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("baseline", help="committed baseline BENCH_<tag>.json")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="allowed fractional rate drop before warning "
-                         "(default 0.5: warn below half the baseline)")
+                         "(default 0.5: warn below half the reference)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regressions instead of "
+                         "warn-only (for stable-clock hosts)")
     args = ap.parse_args(argv)
 
     try:
-        current = load_rows(args.current)
-        baseline = load_rows(args.baseline)
+        cur_doc = load_doc(args.current)
+        current = rows_of(cur_doc)
+        baseline = rows_of(load_doc(args.baseline))
     except (OSError, json.JSONDecodeError, KeyError) as e:
         print(f"bench_guard: cannot read inputs: {e}", file=sys.stderr)
         return 1
 
-    warnings = compare(current, baseline, args.tolerance)
+    warnings = (compare(current, baseline, args.tolerance)
+                + check_scaling(current, args.tolerance))
+    verdict = "regression" if warnings else "ok"
+    record_verdict(args.current, cur_doc, verdict, warnings,
+                   args.tolerance, args.baseline, len(baseline))
     for w in warnings:
         print(f"::warning title=bench regression::{w}")
     if not warnings:
         print(f"bench_guard: {args.current} within {args.tolerance:.0%} "
-              f"of baseline ({len(baseline)} rows checked)")
-    return 0
+              f"of baseline ({len(baseline)} rows checked, "
+              f"verdict recorded)")
+    return 1 if (warnings and args.strict) else 0
 
 
 if __name__ == "__main__":
