@@ -1,28 +1,37 @@
 """Scalability, reworked (was: paper Fig. 6 inference/update timing):
 flat vs hierarchical coarsen->place->refine across graph scale.
 
-Two questions, answered as BENCH_hier.json rows (tag `hier`):
+Three questions, answered as BENCH_hier.json rows (tag `hier`):
 
 1. Stage-II training throughput vs graph size.  The flat SEL/PLC rollout
    is O(steps x vertices), so episodes/sec collapses with scale; the
-   hierarchical path rolls out on the segment graph and stays flat-cost.
-   Synthetic layered graphs sweep 512 -> 16k vertices (the 8k/16k points
-   run under REPRO_FULL=1); `model:olmo_1b:full` (~6.8k-vertex full
-   training-step graph) is measured on BOTH paths — the acceptance bar
-   is hierarchical >= 5x flat on the same graph.
-2. Placement quality at full-model scale.  For every HETERO_FLEETS
+   hierarchical path rolls out on the top segment graph and stays
+   flat-cost.  Synthetic layered graphs sweep 512 -> 16k vertices (the
+   8k/16k points run under REPRO_FULL=1); `model:olmo_1b:full` (~6.8k
+   vertices) is measured on BOTH paths — the acceptance bar is
+   hierarchical >= 5x flat on the same graph.  A second bar compares the
+   MULTI-LEVEL V-cycle against a SINGLE bounded-ratio level at 16k
+   vertices: one quality-bounded (~16x) contraction leaves a ~1k-segment
+   policy graph, the recursive stack reaches ~64 — Stage-II updates/sec
+   must be >= 5x apart (`multi_vs_single`).
+2. 100k+-vertex capability.  The 65k synthetic graph builds, coarsens
+   (per-level timings recorded), and completes `trainer.place()` end to
+   end under a wall-clock cap with peak RSS recorded — this row is the
+   CI smoke.  REPRO_FULL=1 adds the 131k synthetic point and a
+   full-depth model-zoo graph (`model:qwen1p5_110b:full`, ~141k
+   vertices).
+3. Placement quality at full-model scale.  For every HETERO_FLEETS
    entry, a short hierarchical pipeline (Stage-I imitation + Stage-II
-   REINFORCE on the segment graph, then expand + warm-started bounded
-   refinement on the flat graph) must reach a makespan <= the flat
-   CRITICAL-PATH heuristic (best of 3 seeds).  The warm start makes the
-   inequality structural (refinement is monotone); the recorded margins
-   show it is not vacuous.
+   REINFORCE on the segment graph, then V-cycle expand + warm-started
+   bounded refinement on the flat graph) must reach a makespan <= the
+   flat CRITICAL-PATH heuristic (best of 3 seeds).  The warm start makes
+   the inequality structural (refinement is monotone); the recorded
+   margins show it is not vacuous.
 """
 from __future__ import annotations
 
+import resource
 import time
-
-import numpy as np
 
 from common import FULL, budget, emit
 
@@ -31,6 +40,7 @@ from repro.core.heuristics import critical_path_assignment
 from repro.core.hierarchy import HierarchyConfig
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer
+from repro.graphs.partition import coarsen
 from repro.graphs.workloads import get_workload, synthetic_layered
 
 SIZES = (512, 1024, 2048, 4096, 8192, 16384) if FULL else \
@@ -38,6 +48,15 @@ SIZES = (512, 1024, 2048, 4096, 8192, 16384) if FULL else \
 FLAT_MAX = 1024                 # flat updates measured up to here (+ olmo)
 BATCH = 4
 HIER = HierarchyConfig(n_segments=64, refine_rounds=3, refine_top_k=24)
+# 100k-class rows: 65k always (CI smoke), 131k behind REPRO_FULL
+BIG_SIZES = (65536, 131072) if FULL else (65536,)
+BIG_WALL_CAP = 300.0            # seconds: coarsen+place cap for the CI smoke
+BIG_WALL_CAP_FULL = 900.0       # seconds: FULL-only stress rows (131k, qwen)
+
+
+def peak_rss_gb() -> float:
+    """Linux ru_maxrss is KB."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6
 
 
 def seconds_per_update(trainer, sim, n_measure: int = 2) -> float:
@@ -47,17 +66,22 @@ def seconds_per_update(trainer, sim, n_measure: int = 2) -> float:
     return (time.perf_counter() - t0) / n_measure
 
 
-def measure_graph(tag: str, g, dev, flat: bool) -> dict:
+def measure_graph(tag: str, g, dev, flat: bool, full_only: bool = False) -> dict:
+    # full_only=1 rows exist only under REPRO_FULL: bench_guard's
+    # missing-row check skips them when a reduced CI run is compared
+    # against a FULL-budget baseline
+    mark = " full_only=1" if full_only else ""
     out = {}
-    sim0 = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
     hier_tr = DopplerTrainer(g, dev, seed=0, d_hidden=32,
                              total_episodes=100, hierarchy=HIER)
     dt = seconds_per_update(
         hier_tr, WCSimulator(hier_tr.g, dev, choose="fifo", noise_sigma=0.0))
     out["hier"] = dt
     emit(f"hier/{tag}/hier_update", dt * 1e6,
-         f"eps_per_sec={BATCH/dt:.2f} n={g.n} segs={hier_tr.g.n}")
+         f"eps_per_sec={BATCH/dt:.2f} n={g.n} segs={hier_tr.g.n} "
+         f"levels={hier_tr.hier.n_levels}{mark}")
     if flat:
+        sim0 = WCSimulator(g, dev, choose="fifo", noise_sigma=0.0)
         flat_tr = DopplerTrainer(g, dev, seed=0, d_hidden=32,
                                  total_episodes=100)
         n_meas = 2 if g.n <= 2 * FLAT_MAX else 1
@@ -66,6 +90,70 @@ def measure_graph(tag: str, g, dev, flat: bool) -> dict:
         emit(f"hier/{tag}/flat_update", dt * 1e6,
              f"eps_per_sec={BATCH/dt:.2f} n={g.n}")
     return out
+
+
+def measure_big(tag: str, g, dev, wall_cap: float = BIG_WALL_CAP,
+                full_only: bool = False) -> None:
+    """100k-class row: coarsen (per-level timings) + end-to-end place()
+    with peak RSS, under a wall-clock cap (tight for the CI smoke,
+    generous for the FULL-only stress sizes)."""
+    mark = " full_only=1" if full_only else ""
+    t0 = time.perf_counter()
+    tr = DopplerTrainer(g, dev, seed=0, d_hidden=32, total_episodes=100,
+                        hierarchy=HIER)
+    t_coarsen = time.perf_counter() - t0
+    part = tr.hier.partition
+    sizes = ">".join(str(p.seg_graph.n) for p in part.levels)
+    level_secs = ">".join(f"{st['seconds']:.2f}"
+                          for st in part.level_stats)
+    emit(f"hier/{tag}/coarsen", t_coarsen * 1e6,
+         f"verts_per_sec={g.n/max(t_coarsen, 1e-9):.0f} n={g.n} "
+         f"levels={part.n_levels} sizes={sizes} level_secs={level_secs}"
+         f"{mark}")
+    t0 = time.perf_counter()
+    a, t = tr.place()
+    t_place = time.perf_counter() - t0
+    ok = int(t_coarsen + t_place <= wall_cap)
+    emit(f"hier/{tag}/place", t_place * 1e6,
+         f"makespan_ms={t*1e3:.2f} n={g.n} rss_gb={peak_rss_gb():.2f} "
+         f"wall_cap_s={wall_cap:.0f} ok={ok}{mark}")
+    if not ok:
+        print(f"# WARNING: {tag} coarsen+place took "
+              f"{t_coarsen + t_place:.0f}s, over the {wall_cap:.0f}s "
+              f"wall cap")
+
+
+def multi_vs_single(n_target: int, dev) -> None:
+    """Stage-II updates/sec: the full V-cycle stack vs ONE bounded-ratio
+    coarsening level.  A single quality-bounded (~max_ratio) contraction
+    of a `n_target`-vertex graph cannot go below ~n/max_ratio segments
+    (Mayer et al.: one-shot extreme ratios destroy partition quality),
+    so the non-recursive policy trains on a ~1k-vertex graph; the
+    recursive stack reaches ~64 segments.  Bar: >= 5x."""
+    g = synthetic_layered(n_layers=max(2, n_target // 16), width=16)
+    multi_tr = DopplerTrainer(g, dev, seed=0, d_hidden=32,
+                              total_episodes=100, hierarchy=HIER)
+    dt_multi = seconds_per_update(
+        multi_tr, WCSimulator(multi_tr.g, dev, choose="fifo",
+                              noise_sigma=0.0))
+    # one bounded level: coarsen once at the V-cycle's per-level ratio,
+    # then train the flat policy on that segment graph directly
+    part1 = coarsen(g, max(HIER.n_segments, g.n // int(HIER.max_ratio)),
+                    cap_factor=HIER.cap_factor)
+    g1 = part1.seg_graph
+    single_tr = DopplerTrainer(g1, dev, seed=0, d_hidden=32,
+                               total_episodes=100)
+    dt_single = seconds_per_update(
+        single_tr, WCSimulator(g1, dev, choose="fifo", noise_sigma=0.0),
+        n_measure=1)
+    speedup = dt_single / dt_multi
+    emit(f"hier/synth{n_target}/multi_vs_single", dt_single * 1e6,
+         f"speedup={speedup:.1f}x n={g.n} single_segs={g1.n} "
+         f"multi_segs={multi_tr.g.n} levels={multi_tr.hier.n_levels} "
+         f"bar=5x")
+    if speedup < 5:
+        print(f"# WARNING: multi-level Stage-II speedup {speedup:.1f}x "
+              f"over single-level below the 5x bar")
 
 
 def makespan_contest(g, fleet: str) -> None:
@@ -95,7 +183,22 @@ def main():
         g = synthetic_layered(n_layers=max(2, n_target // 16), width=16)
         # gate on the sweep target, not g.n (the graph carries extra input
         # vertices), so the 1024 point keeps its flat baseline
-        measure_graph(f"synth{n_target}", g, dev, flat=n_target <= FLAT_MAX)
+        measure_graph(f"synth{n_target}", g, dev, flat=n_target <= FLAT_MAX,
+                      full_only=n_target > 4096)
+
+    # ------------------- multi-level vs one bounded level (acceptance bar)
+    multi_vs_single(16384, dev)
+
+    # ------------------------------- 100k-class smoke (65k always, CI cap)
+    for n_target in BIG_SIZES:
+        g = synthetic_layered(n_layers=max(2, n_target // 16), width=16)
+        cap = BIG_WALL_CAP if n_target <= 65536 else BIG_WALL_CAP_FULL
+        measure_big(f"synth{n_target}", g, dev, wall_cap=cap,
+                    full_only=n_target > 65536)
+    if FULL:
+        g = get_workload("model:qwen1p5_110b:full", seq=64, microbatches=8)
+        measure_big("qwen110b_full", g, dev, wall_cap=BIG_WALL_CAP_FULL,
+                    full_only=True)
 
     # ------------------------------------- full model: the acceptance bar
     g = get_workload("model:olmo_1b:full", seq=64)

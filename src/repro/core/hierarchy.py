@@ -30,7 +30,7 @@ import dataclasses
 
 import numpy as np
 
-from ..graphs.partition import Partition
+from ..graphs.partition import MultilevelPartition, Partition
 from .engine import RewardEngine, as_engine
 from .graph import DataflowGraph
 
@@ -46,11 +46,22 @@ class HierarchyConfig:
     refine_rounds:  bounded refinement rounds per :meth:`refine` call.
     refine_top_k:   boundary vertices re-placed per round.
     cap_factor:     coarsening imbalance cap (see ``coarsen``).
+    max_ratio:      per-level contraction bound for the multi-level
+                    V-cycle (``coarsen_multilevel``); graphs within one
+                    ratio of ``n_segments`` coarsen in a single level,
+                    exactly as before.
+    max_levels:     hard cap on V-cycle depth.
+    level_cp_max_n: intermediate V-cycle levels up to this size pool a
+                    CRITICAL-PATH seed before refining (the O(n x nd)
+                    python heuristic is priced out above it).
     """
     n_segments: int = 64
     refine_rounds: int = 2
     refine_top_k: int = 16
     cap_factor: float = 2.0
+    max_ratio: float = 16.0
+    max_levels: int = 16
+    level_cp_max_n: int = 4096
 
 
 @dataclasses.dataclass
@@ -83,32 +94,113 @@ def boundary_scores(g: DataflowGraph, assignment: np.ndarray) -> np.ndarray:
     return scores
 
 
-class HierarchicalPolicy:
-    """Expansion + bounded boundary refinement over a :class:`Partition`."""
+def propose_moves(g: DataflowGraph, a: np.ndarray, top_k: int,
+                  exec_cost: np.ndarray | None, nd: int
+                  ) -> tuple[np.ndarray, list[tuple[int, int]]]:
+    """One refinement round's candidate single moves, vectorized.
 
-    def __init__(self, partition: Partition, config: HierarchyConfig,
-                 devices):
+    Returns ``(cands, moves)``: a ``(K, n)`` candidate-assignment matrix
+    and the ``(vertex, device)`` move list, ordered exactly like the
+    original per-vertex Python loops (communication moves by boundary
+    rank then device id, balance moves by per-device cost then the
+    least-loaded-device order), deduplicated with first occurrence kept
+    — tests/test_hierarchy.py pins bit-identity against a loop
+    reference.
+
+    Communication moves: the ``top_k`` highest boundary-traffic vertices
+    onto each device their graph neighbors occupy.  Balance moves: the
+    heaviest vertices of the most-loaded device onto the two
+    least-loaded devices (what fixes straggler fleets — boundary traffic
+    alone never sees compute imbalance)."""
+    a = np.asarray(a, dtype=np.int64)
+    moves: list[tuple[int, int]] = []
+    scores = boundary_scores(g, a)
+    top = np.argsort(-scores, kind="stable")[:top_k]
+    top = top[scores[top] > 0]
+    E = g.edge_array()
+    if len(top) and len(E):
+        rank = np.full(g.n, -1, dtype=np.int64)
+        rank[top] = np.arange(len(top))
+        src, dst = E[:, 0].astype(np.int64), E[:, 1].astype(np.int64)
+        inputs = g.input_mask()
+        m_in = (rank[dst] >= 0) & ~inputs[src]    # v as consumer: pred's dev
+        m_out = rank[src] >= 0                    # v as producer: succ's dev
+        vv = np.concatenate([dst[m_in], src[m_out]])
+        dd = np.concatenate([a[src[m_in]], a[dst[m_out]]])
+        keep = dd != a[vv]
+        keys = np.unique(rank[vv[keep]] * nd + dd[keep])
+        moves = list(zip(top[keys // nd].tolist(), (keys % nd).tolist()))
+    if exec_cost is not None:
+        seen = set(moves)
+        own = exec_cost[np.arange(g.n), a]
+        load = np.zeros(nd)
+        np.add.at(load, a, own)
+        dmax = int(load.argmax())
+        dmins = np.argsort(load, kind="stable")[:2]
+        on_max = np.flatnonzero(a == dmax)
+        on_max = on_max[np.argsort(-own[on_max],
+                                   kind="stable")][:max(top_k // 2, 4)]
+        on_max = on_max[own[on_max] > 0]
+        bv = np.repeat(on_max, len(dmins))
+        bd = np.tile(dmins, len(on_max)).astype(np.int64)
+        ok = bd != a[bv]
+        for v, d in zip(bv[ok].tolist(), bd[ok].tolist()):
+            if (v, d) not in seen:
+                seen.add((v, d))
+                moves.append((v, d))
+    if not moves:
+        return np.zeros((0, g.n), dtype=np.int64), moves
+    cands = np.repeat(a[None, :], len(moves), axis=0)
+    mv = np.asarray(moves, dtype=np.int64)
+    cands[np.arange(len(moves)), mv[:, 0]] = mv[:, 1]
+    return cands, moves
+
+
+class HierarchicalPolicy:
+    """Expansion + level-by-level refinement over a partition stack.
+
+    Accepts a single :class:`Partition` (wrapped into a one-level
+    :class:`MultilevelPartition`) or a multi-level stack from
+    ``coarsen_multilevel``; ``refine`` operates on the flat graph exactly
+    as before, and :meth:`refine_levels` walks the V-cycle down from the
+    top."""
+
+    def __init__(self, partition: Partition | MultilevelPartition,
+                 config: HierarchyConfig, devices):
+        if isinstance(partition, Partition):
+            partition = MultilevelPartition([partition])
         self.partition = partition
         self.config = config
         self.devices = devices
         self.n_devices = int(devices.n) if hasattr(devices, "n") \
             else int(devices)
         self.refine_state = RefineState()
-        self._exec_cost = None          # lazy (n, nd) flat exec-cost table
+        self.vcycle_stats: list[dict] = []   # per-level refine bookkeeping
+        self._exec_cost_cache: dict[int, np.ndarray] = {}
+
+    @property
+    def n_levels(self) -> int:
+        return self.partition.n_levels
+
+    def exec_cost_at(self, level: int) -> np.ndarray | None:
+        """(n_level, nd) per-device exec seconds at a V-cycle level (0 for
+        inputs), used to rank load-balance refinement moves; None when
+        the policy was built with a bare device count."""
+        if not hasattr(self.devices, "flops_per_sec"):
+            return None
+        if level not in self._exec_cost_cache:
+            g = self.partition.level_graph(level)
+            cost = (self.devices.exec_overhead_vec[None, :]
+                    + g.flops_array()[:, None]
+                    / self.devices.flops_per_sec[None, :])
+            cost[g.input_mask()] = 0.0
+            self._exec_cost_cache[level] = cost
+        return self._exec_cost_cache[level]
 
     @property
     def exec_cost(self) -> np.ndarray | None:
-        """(n, nd) per-device exec seconds of flat vertices (0 for inputs),
-        used to rank load-balance refinement moves; None when the policy
-        was built with a bare device count."""
-        if self._exec_cost is None and hasattr(self.devices, "flops_per_sec"):
-            g = self.partition.flat
-            flops = g.flops_array()
-            cost = (self.devices.exec_overhead_vec[None, :]
-                    + flops[:, None] / self.devices.flops_per_sec[None, :])
-            cost[g.input_mask()] = 0.0
-            self._exec_cost = cost
-        return self._exec_cost
+        """Flat-graph (level 0) exec-cost table."""
+        return self.exec_cost_at(0)
 
     # ------------------------------------------------------------ expand
     def expand(self, seg_assignment) -> np.ndarray:
@@ -131,64 +223,35 @@ class HierarchicalPolicy:
         the result never scores worse than the input under ``engine``.
         """
         eng = as_engine(engine)
-        g = self.partition.flat
         cfg = self.config
-        rounds = cfg.refine_rounds if rounds is None else rounds
-        top_k = cfg.refine_top_k if top_k is None else top_k
-        nd = self.n_devices
+        a, t, rounds_done, moves_applied = self._refine_on(
+            self.partition.flat, self.exec_cost, assignment, eng, episode,
+            cfg.refine_rounds if rounds is None else rounds,
+            cfg.refine_top_k if top_k is None else top_k)
+        self.refine_state = RefineState(a.copy(), float(t), rounds_done,
+                                        moves_applied)
+        return a, float(t)
+
+    def _refine_on(self, g: DataflowGraph, exec_cost, assignment, eng,
+                   episode: int, rounds: int, top_k: int
+                   ) -> tuple[np.ndarray, float, int, int]:
+        """Graph-generic refinement body (flat graph or a V-cycle level)."""
         a = np.asarray(assignment, dtype=np.int64).copy()
         t = float(eng.exec_times(a[None, :], episode)[0])
         rounds_done = moves_applied = 0
-
         for r in range(rounds):
-            cands, moves = [], []
-            seen: set[tuple[int, int]] = set()
-
-            def propose(v: int, d: int):
-                if d != int(a[v]) and (v, d) not in seen:
-                    seen.add((v, d))
-                    b = a.copy()
-                    b[v] = d
-                    cands.append(b)
-                    moves.append((v, d))
-
-            # (a) communication moves: top boundary-traffic vertices onto
-            # the devices their neighbors already occupy
-            scores = boundary_scores(g, a)
-            top = np.argsort(-scores, kind="stable")[:top_k]
-            top = top[scores[top] > 0]
-            for v in top.tolist():
-                near = ({int(a[p]) for p in g.preds[v] if not g.is_input(p)}
-                        | {int(a[s]) for s in g.succs[v]})
-                near.discard(int(a[v]))
-                for d in sorted(near):
-                    propose(v, d)
-            # (b) balance moves: biggest vertices on the most-loaded device
-            # onto the least-loaded ones (what fixes straggler fleets —
-            # boundary traffic alone never sees compute imbalance)
-            cost = self.exec_cost
-            if cost is not None:
-                own = cost[np.arange(g.n), a]
-                load = np.zeros(nd)
-                np.add.at(load, a, own)
-                dmax = int(load.argmax())
-                dmins = np.argsort(load, kind="stable")[:2]
-                on_max = np.flatnonzero(a == dmax)
-                on_max = on_max[np.argsort(-own[on_max],
-                                           kind="stable")][:max(top_k // 2, 4)]
-                for v in on_max.tolist():
-                    if own[v] <= 0:
-                        continue
-                    for d in dmins.tolist():
-                        propose(v, int(d))
-            if not cands:
+            cands, moves = propose_moves(g, a, top_k, exec_cost,
+                                         self.n_devices)
+            if not moves:
                 break
-            ts = np.asarray(eng.exec_times(np.stack(cands),
-                                           episode + 1 + r), dtype=float)
+            ts = np.asarray(eng.exec_times(cands, episode + 1 + r),
+                            dtype=float)
             rounds_done += 1
             order = np.argsort(ts, kind="stable")
             if ts[order[0]] >= t:
                 break
+            # greedy combination of every individually-improving move vs
+            # the best single move (one more 2-row call)
             combined = a.copy()
             moved: set[int] = set()
             for i in order.tolist():
@@ -209,10 +272,59 @@ class HierarchicalPolicy:
                 # noisy engines can re-score the "improving" move worse;
                 # keep monotonicity and stop
                 break
+        return a, float(t), rounds_done, moves_applied
 
-        self.refine_state = RefineState(a.copy(), float(t), rounds_done,
-                                        moves_applied)
-        return a, float(t)
+    # ------------------------------------------------------------ V-cycle
+    def refine_levels(self, top_assignment, episode: int = 0,
+                      rounds: int | None = None,
+                      top_k: int | None = None) -> np.ndarray:
+        """Walk the V-cycle down: top segment assignment -> flat.
+
+        At every intermediate level the one-level-expanded assignment is
+        refined against that level's *exact* noise-free WC simulator
+        (small graphs — cheap), pooling a segment-CP seed where the
+        level graph is small enough, so partition quality degrades
+        gracefully instead of jumping 1000x in one expand.  The flat
+        (level 0) assignment is returned UNREFINED: the caller pools it
+        with its own candidates and runs the final flat refinement under
+        its own engine, which is what keeps ``place() <= CP`` structural
+        at the bottom.  Per-level timings/scores land in
+        ``self.vcycle_stats``."""
+        import time as _time
+
+        from .heuristics import critical_path_assignment
+        from .simulator import WCSimulator
+
+        part = self.partition
+        cfg = self.config
+        rounds = cfg.refine_rounds if rounds is None else rounds
+        top_k = cfg.refine_top_k if top_k is None else top_k
+        a = np.asarray(top_assignment, dtype=np.int64)
+        self.vcycle_stats = []
+        has_model = hasattr(self.devices, "flops_per_sec")
+        for lvl in range(part.n_levels - 1, 0, -1):
+            a = part.levels[lvl].expand(a)
+            if not has_model:
+                continue                    # bare device count: expand only
+            t0 = _time.perf_counter()
+            g = part.level_graph(lvl)
+            eng = as_engine(WCSimulator(g, self.devices, choose="fifo",
+                                        noise_sigma=0.0))
+            ep = episode + 211 * lvl
+            pool = [a]
+            if g.n <= cfg.level_cp_max_n:
+                pool += [critical_path_assignment(g, self.devices, seed=s)
+                         for s in range(2)]
+            ts = np.asarray(eng.exec_times(np.stack(pool), ep), dtype=float)
+            t_in = float(ts.min())
+            a = pool[int(ts.argmin())]
+            a, t_out, rds, mvs = self._refine_on(
+                g, self.exec_cost_at(lvl), a, eng, ep + 1, rounds, top_k)
+            self.vcycle_stats.append(
+                {"level": lvl, "n": g.n, "t_in": t_in, "t_out": t_out,
+                 "rounds": rds, "moves": mvs,
+                 "seconds": _time.perf_counter() - t0})
+        return part.levels[0].expand(a)
 
     # ------------------------------------------------- checkpoint plumbing
     def state_dict(self) -> dict:
@@ -222,6 +334,11 @@ class HierarchicalPolicy:
             "refine_rounds": self.config.refine_rounds,
             "refine_top_k": self.config.refine_top_k,
             "vertex_segment": self.partition.vertex_segment.tolist(),
+            # full level stack: levels[k] maps level-k vertices to
+            # level-(k+1) segments; verified entry-by-entry on resume
+            "n_levels": self.partition.n_levels,
+            "level_maps": [p.vertex_segment.tolist()
+                           for p in self.partition.levels],
             "refine_assignment": (rs.assignment.tolist()
                                   if rs.assignment is not None else None),
             "refine_exec_time": (float(rs.exec_time)
@@ -238,6 +355,32 @@ class HierarchicalPolicy:
                 "hierarchical checkpoint was saved against a different "
                 "partition (vertex->segment map mismatch); rebuild the "
                 "trainer with the same graph and HierarchyConfig")
+        saved_levels = state.get("level_maps")
+        if saved_levels is None:
+            # pre-V-cycle checkpoint: only valid for a one-level stack
+            # (where the composite map above already pins everything)
+            if self.partition.n_levels != 1:
+                raise ValueError(
+                    "hierarchical checkpoint has no level stack but this "
+                    "trainer's partition is multi-level; rebuild with the "
+                    "same graph and HierarchyConfig (partition mismatch)")
+        else:
+            if len(saved_levels) != self.partition.n_levels:
+                raise ValueError(
+                    f"hierarchical checkpoint has {len(saved_levels)} "
+                    f"partition levels, this trainer has "
+                    f"{self.partition.n_levels}; rebuild with the same "
+                    f"graph and HierarchyConfig (partition mismatch)")
+            for k, (lvl_map, part) in enumerate(
+                    zip(saved_levels, self.partition.levels)):
+                arr = np.asarray(lvl_map, dtype=np.int64)
+                if (arr.shape != part.vertex_segment.shape
+                        or (arr != part.vertex_segment).any()):
+                    raise ValueError(
+                        f"hierarchical checkpoint level {k} maps "
+                        f"{arr.shape[0]} vertices differently; rebuild "
+                        f"with the same graph and HierarchyConfig "
+                        f"(partition mismatch)")
         a = state.get("refine_assignment")
         te = state.get("refine_exec_time")
         self.refine_state = RefineState(

@@ -32,10 +32,11 @@ def save_policy(ckpt_dir: str | pathlib.Path, trainer) -> pathlib.Path:
         "sel_mode": trainer.sel_mode,
         "plc_mode": trainer.plc_mode,
     }
-    # hierarchical trainers additionally checkpoint the coarsening map
-    # (verified on restore) and the refinement state, so a resumed run
-    # continues the coarsen->place->refine pipeline exactly where the
-    # interrupted one stopped (core/hierarchy.py)
+    # hierarchical trainers additionally checkpoint the full V-cycle
+    # level stack (every level's vertex->segment map, verified
+    # entry-by-entry on restore) and the refinement state, so a resumed
+    # run continues the coarsen->place->refine pipeline exactly where
+    # the interrupted one stopped (core/hierarchy.py)
     if getattr(trainer, "hier", None) is not None:
         extra["hierarchy"] = trainer.hier.state_dict()
     return save_checkpoint(ckpt_dir, trainer.episode,

@@ -134,12 +134,19 @@ class DopplerTrainer:
         self.hier = None
         self.hierarchy = None
         if hierarchy is not None:
-            from ..graphs.partition import coarsen
+            from ..graphs.partition import coarsen_multilevel
             from .hierarchy import HierarchicalPolicy, HierarchyConfig
             if isinstance(hierarchy, int):
                 hierarchy = HierarchyConfig(n_segments=hierarchy)
-            part = coarsen(graph, hierarchy.n_segments,
-                           cap_factor=hierarchy.cap_factor)
+            # V-cycle coarsening: bounded contraction per level, so 100k+
+            # vertex graphs reach the policy through a stack of partitions
+            # instead of one extreme-ratio contraction.  Graphs within
+            # max_ratio of n_segments get exactly one level — identical
+            # to the old single-shot coarsen.
+            part = coarsen_multilevel(graph, hierarchy.n_segments,
+                                      cap_factor=hierarchy.cap_factor,
+                                      max_ratio=hierarchy.max_ratio,
+                                      max_levels=hierarchy.max_levels)
             self.hierarchy = hierarchy
             self.hier = HierarchicalPolicy(part, hierarchy, dev)
             graph = part.seg_graph
@@ -618,6 +625,9 @@ class DopplerTrainer:
         expanded and scored in ONE batched engine call; the winner then
         takes a bounded boundary-refinement pass on the flat graph
         (``HierarchicalPolicy.refine``, monotone w.r.t. ``engine``).
+        Multi-level trainers additionally descend the V-cycle from the
+        best segment candidate (``HierarchicalPolicy.refine_levels``) and
+        pool the result before the final flat refinement.
 
         ``include_flat_cp`` additionally seeds the candidate pool with
         CRITICAL-PATH runs on the FLAT graph (O(n x devices) python —
@@ -654,6 +664,17 @@ class DopplerTrainer:
         ts = np.asarray(eng.exec_times(flat, ep), dtype=float)
         k = int(ts.argmin())
         a, t = flat[k], float(ts[k])
+        if self.hier.n_levels > 1:
+            # V-cycle descent from the best *segment* candidate: bounded
+            # refinement against each level's exact WC twin on the way
+            # down recovers the quality a single extreme-ratio expand
+            # throws away.  Pooled with the straight-expansion winner, so
+            # it can only help.
+            kseg = int(ts[:len(cands)].argmin())
+            vc = self.hier.refine_levels(cands[kseg], episode=ep)
+            tv = float(eng.exec_times(vc[None, :], ep)[0])
+            if tv < t:
+                a, t = vc, tv
         if refine:
             a, t = self.hier.refine(a, eng, episode=ep)
         return a, t

@@ -170,47 +170,64 @@ def _fuse_cheap(g: DataflowGraph, cheap_flops: float) -> DataflowGraph:
     The surviving root keeps its own (stable) label — or, for graphs from
     other sources whose roots may be unlabeled, inherits the label of the
     topo-first absorbed vertex that has one — and absorbs the fused
-    vertices' flops so the graph's total compute is conserved."""
-    absorb_into = {}
-    for v in g.topo_order:
-        vert = g.vertices[v]
-        if vert.kind == "input":
-            continue
-        if vert.flops <= cheap_flops and len(g.succs[v]) == 1:
-            absorb_into[v] = g.succs[v][0]
+    vertices' flops so the graph's total compute is conserved.
 
-    def root(v):
-        while v in absorb_into:
-            v = absorb_into[v]
-        return v
+    Fully vectorized (pointer-jumping root resolution + np.add.at flop
+    accumulation in topo order) so fusing a 100k-vertex tiled graph is
+    milliseconds, with outputs bit-identical to the per-vertex loops it
+    replaced."""
+    n = g.n
+    flops = g.flops_array()
+    out_deg = np.array([len(g.succs[v]) for v in range(n)])
+    absorbed = (~g.input_mask()) & (flops <= cheap_flops) & (out_deg == 1)
+    nxt = np.arange(n, dtype=np.int64)
+    av = np.flatnonzero(absorbed)
+    nxt[av] = np.array([g.succs[v][0] for v in av.tolist()],
+                       dtype=np.int64) if len(av) else av
+    root_of = nxt.copy()                 # pointer jumping to the fixpoint
+    while True:
+        hop = root_of[root_of]
+        if (hop == root_of).all():
+            break
+        root_of = hop
 
-    extra_flops: dict[int, float] = {}
-    inherited_label: dict[int, str] = {}
-    for v in g.topo_order:              # topo order: earliest label wins
-        if v not in absorb_into:
-            continue
-        r = root(v)
-        vert = g.vertices[v]
-        extra_flops[r] = extra_flops.get(r, 0.0) + vert.flops
-        if vert.label and r not in inherited_label:
-            inherited_label[r] = vert.label
+    # flop accumulation + label inheritance in topo order (np.add.at adds
+    # in element order, matching the sequential loop bit-for-bit; earliest
+    # absorbed label per root wins)
+    topo = np.asarray(g.topo_order, dtype=np.int64)
+    sel = topo[absorbed[topo]]
+    extra = np.zeros(n)
+    np.add.at(extra, root_of[sel], flops[sel])
+    lab_sel = sel[[bool(g.vertices[v].label) for v in sel.tolist()]]
+    rr = root_of[lab_sel]
+    uniq_r, first = np.unique(rr, return_index=True)
+    inherited_label = {int(r): g.vertices[int(lab_sel[i])].label
+                       for r, i in zip(uniq_r, first)}
 
-    keep = [v for v in range(g.n) if v not in absorb_into]
-    remap = {v: i for i, v in enumerate(keep)}
-    out = DataflowGraph(g.name)
-    for v in keep:
-        vert = g.vertices[v]
-        out.add_vertex(vert.kind, vert.flops + extra_flops.get(v, 0.0),
-                       vert.out_bytes, vert.meta_op, vert.role,
-                       vert.label or inherited_label.get(v, ""),
-                       vert.out_shape)
-    edges = set()
-    for (s, d) in g.edges:
-        rs, rd = root(s), root(d)
-        if rs != rd:
-            edges.add((remap[rs], remap[rd]))
-    for (s, d) in sorted(edges):
-        out.add_edge(s, d)
-    # an absorbed output's value is produced (cost-model-wise) by its root
-    out.outputs = [remap[root(v)] for v in g.outputs]
-    return out.freeze()
+    keep = np.flatnonzero(~absorbed)
+    remap = np.full(n, -1, dtype=np.int64)
+    remap[keep] = np.arange(len(keep))
+    kl = keep.tolist()
+    E = g.edge_array().astype(np.int64)
+    if len(E):
+        rs, rd = root_of[E[:, 0]], root_of[E[:, 1]]
+        m = rs != rd
+        K = len(keep)
+        keys = np.unique(remap[rs[m]] * K + remap[rd[m]])   # sorted+dedup
+        new_edges = np.stack([keys // K, keys % K], axis=1)
+    else:
+        new_edges = np.zeros((0, 2), dtype=np.int64)
+    return DataflowGraph.from_arrays(
+        g.name,
+        [g.vertices[v].kind for v in kl],
+        flops[keep] + extra[keep],
+        g.out_bytes_array()[keep],
+        meta_op=[g.vertices[v].meta_op for v in kl],
+        roles=[g.vertices[v].role for v in kl],
+        labels=[g.vertices[v].label or inherited_label.get(v, "")
+                for v in kl],
+        out_shapes=[g.vertices[v].out_shape for v in kl],
+        edges=new_edges,
+        # an absorbed output's value is produced (cost-model-wise) by
+        # its root
+        outputs=[int(remap[root_of[v]]) for v in g.outputs])

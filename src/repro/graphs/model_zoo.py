@@ -25,7 +25,10 @@ Input vertices carry the parameter pytree path as their label
 """
 from __future__ import annotations
 
+import collections
 import functools
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -203,7 +206,69 @@ def import_model_full(name: str, *, seq: int = DEFAULT_SEQ, batch: int = 1,
                               fuse_cheap, cheap_flops)
 
 
-@functools.lru_cache(maxsize=16)
+class _ByteLRUCache:
+    """LRU cache budgeted in estimated graph bytes, not entry count.
+
+    Full-depth training-step graphs range from a few MB (olmo_1b) to
+    several hundred MB at 100k+ vertices; an entry-count LRU of 16 can
+    hold multiple GB and OOM a benchmark sweep.  This cache charges each
+    graph its :meth:`DataflowGraph.nbytes_estimate` and evicts least-
+    recently-used entries until under budget.  Budget comes from the
+    ``REPRO_ZOO_CACHE_BYTES`` env var (default 2 GiB); a single graph
+    larger than the whole budget is returned uncached.  Evictions are
+    logged to stderr so sweeps that thrash are visible."""
+
+    DEFAULT_BYTES = 2 << 30
+
+    def __init__(self, fn):
+        self.fn = fn
+        self._data: "collections.OrderedDict[tuple, DataflowGraph]" = \
+            collections.OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+        functools.update_wrapper(self, fn)
+
+    @property
+    def max_bytes(self) -> int:
+        return int(os.environ.get("REPRO_ZOO_CACHE_BYTES",
+                                  self.DEFAULT_BYTES))
+
+    def cur_bytes(self) -> int:
+        return sum(g.nbytes_estimate() for g in self._data.values())
+
+    def __call__(self, *key):
+        if key in self._data:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.misses += 1
+        g = self.fn(*key)
+        budget = self.max_bytes
+        size = g.nbytes_estimate()
+        if size > budget:
+            return g                      # bigger than the whole budget
+        self._data[key] = g
+        total = self.cur_bytes()
+        while total > budget and len(self._data) > 1:
+            old_key, old_g = self._data.popitem(last=False)
+            freed = old_g.nbytes_estimate()
+            total -= freed
+            self.evictions += 1
+            print(f"[model_zoo] cache evict {old_key[0]!r} "
+                  f"(~{freed / 1e6:.0f} MB, {total / 1e6:.0f} MB held, "
+                  f"budget {budget / 1e6:.0f} MB)", file=sys.stderr)
+        return g
+
+    def cache_info(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._data),
+                "bytes": self.cur_bytes(), "max_bytes": self.max_bytes}
+
+    def cache_clear(self) -> None:
+        self._data.clear()
+        self.hits = self.misses = self.evictions = 0
+
+
+@_ByteLRUCache
 def _import_model_full(arch: str, seq: int, batch: int, microbatches: int,
                        n_layers: int | None, unit_blocks: int | None,
                        fuse_cheap: bool, cheap_flops: float) -> DataflowGraph:

@@ -46,7 +46,8 @@ import numpy as np
 
 from ..core.graph import DataflowGraph
 
-__all__ = ["Partition", "Replication", "coarsen", "tile_graph"]
+__all__ = ["Partition", "Replication", "MultilevelPartition", "coarsen",
+           "coarsen_multilevel", "tile_graph"]
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +110,113 @@ class Partition:
 
 
 # ---------------------------------------------------------------------------
+# Multi-level partitions (METIS-style V-cycle)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MultilevelPartition:
+    """A stack of :class:`Partition` levels: ``levels[0]`` coarsens the
+    flat graph, ``levels[k]`` coarsens ``levels[k-1].seg_graph``; the top
+    level's segment graph is what the policy places.
+
+    Duck-types the single-:class:`Partition` surface that
+    ``core/hierarchy.py`` and the trainer consume (``flat``,
+    ``seg_graph``, ``vertex_segment``, ``expand``, ``members``,
+    ``n_segments``), with ``vertex_segment`` the *composed* flat->top
+    map — so a one-level stack is indistinguishable from the Partition
+    it wraps.  ``level_stats`` records per-level contraction bookkeeping
+    (vertex counts and coarsen seconds) for the scalability benchmarks.
+    """
+    levels: list[Partition]
+    level_stats: list[dict] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.levels:
+            raise ValueError("MultilevelPartition needs >= 1 level")
+        composed = self.levels[0].vertex_segment
+        for part in self.levels[1:]:
+            composed = part.vertex_segment[composed]
+        self.vertex_segment = composed
+
+    @property
+    def flat(self) -> DataflowGraph:
+        return self.levels[0].flat
+
+    @property
+    def seg_graph(self) -> DataflowGraph:
+        return self.levels[-1].seg_graph
+
+    @property
+    def n_segments(self) -> int:
+        return self.seg_graph.n
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def level_graph(self, k: int) -> DataflowGraph:
+        """Graph at level ``k``: 0 = flat, ``n_levels`` = the top segment
+        graph (level ``k``'s graph is what ``levels[k]`` coarsens *into*
+        for k >= 1)."""
+        return self.flat if k == 0 else self.levels[k - 1].seg_graph
+
+    def members(self, s: int) -> np.ndarray:
+        return np.flatnonzero(self.vertex_segment == s)
+
+    def expand(self, seg_assignment, to_level: int = 0) -> np.ndarray:
+        """Top-level segment assignment(s) -> assignment(s) at
+        ``to_level`` (default: all the way down to the flat graph)."""
+        a = np.asarray(seg_assignment)
+        if a.shape[-1] != self.n_segments:
+            raise ValueError(f"segment assignment has {a.shape[-1]} entries,"
+                             f" expected {self.n_segments}")
+        if to_level == 0:
+            return a[..., self.vertex_segment]
+        for part in reversed(self.levels[to_level:]):
+            a = part.expand(a)
+        return a
+
+
+def coarsen_multilevel(graph: DataflowGraph, n_segments: int,
+                       cap_factor: float = 2.0, max_ratio: float = 16.0,
+                       max_levels: int = 16) -> MultilevelPartition:
+    """Coarsen ``graph`` level by level until it fits ``n_segments``.
+
+    Each level contracts by at most ``max_ratio`` (compute vertices), the
+    METIS-style bounded-contraction V-cycle: one-shot contraction ratios
+    in the thousands destroy partition quality (Mayer et al.), so a
+    131k-vertex graph reaches a 64-segment top through ~3 intermediate
+    levels instead of one 2000x jump, and refinement can later walk back
+    down the same stack level by level.
+
+    Graphs within ``max_ratio`` of the target produce a single level
+    that is exactly ``coarsen(graph, n_segments, cap_factor)``.
+    Deterministic like :func:`coarsen`; stops early when a level stops
+    making progress."""
+    import time as _time
+    n_segments = max(1, int(n_segments))
+    max_ratio = max(1.5, float(max_ratio))
+    levels: list[Partition] = []
+    stats: list[dict] = []
+    g = graph
+    for _ in range(max(1, int(max_levels))):
+        n_compute = int((~g.input_mask()).sum())
+        target = max(n_segments, -(-n_compute // int(max_ratio)))
+        t0 = _time.perf_counter()
+        part = coarsen(g, target, cap_factor)
+        dt = _time.perf_counter() - t0
+        if levels and part.seg_graph.n >= g.n:
+            break                           # no progress: keep the stack
+        levels.append(part)
+        stats.append({"level": len(levels), "n_in": g.n,
+                      "n_out": part.seg_graph.n, "target": target,
+                      "seconds": dt})
+        g = part.seg_graph
+        if int((~g.input_mask()).sum()) <= n_segments:
+            break
+    return MultilevelPartition(levels, stats)
+
+
+# ---------------------------------------------------------------------------
 # Coarsening
 # ---------------------------------------------------------------------------
 def coarsen(graph: DataflowGraph, n_segments: int,
@@ -162,6 +270,25 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
             parent[v], v = r, parent[v]
         return r
 
+    def roots_all() -> np.ndarray:
+        """Fully path-compress ``parent`` by pointer jumping; returns the
+        per-vertex root array (the vectorized twin of mapping ``find``
+        over every vertex — same roots, O(m log n) numpy instead of a
+        Python loop)."""
+        while True:
+            pp = parent[parent]
+            if np.array_equal(pp, parent):
+                return parent
+            parent[:] = pp
+
+    # compute->compute edges once; cluster pairs are recomputed per pass
+    # from the evolving union-find roots
+    E = g.edge_array()
+    ce_mask = (~is_input[E[:, 0]] & ~is_input[E[:, 1]]) if len(E) else \
+        np.zeros(0, dtype=bool)
+    ce_src = E[ce_mask, 0].astype(np.int64)
+    ce_dst = E[ce_mask, 1].astype(np.int64)
+
     cflops = flops.copy()
     n_clusters = len(compute)
     if n_clusters > target:
@@ -170,17 +297,6 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
         pos = np.empty(n, dtype=np.int64)
         pos[g.topo_order] = np.arange(n)
 
-        def compute_edges():
-            """Unique (cluster, cluster) pairs over compute-only edges."""
-            pairs = set()
-            for (u, v) in g.edges:
-                if is_input[u] or is_input[v]:
-                    continue
-                cu, cv = find(u), find(v)
-                if cu != cv:
-                    pairs.add((cu, cv))
-            return pairs
-
         for _ in range(32):
             if n_clusters <= target:
                 break
@@ -188,26 +304,35 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
             for direction in ("succ", "pred"):
                 if n_clusters <= target:
                     break
-                pairs = compute_edges()
-                degree: dict[int, list] = {}
-                for (cu, cv) in pairs:
-                    key, other = (cu, cv) if direction == "succ" else (cv, cu)
-                    degree.setdefault(key, []).append(other)
+                # unique (cluster, cluster) pairs over compute-only edges,
+                # keyed by the merge-candidate side of the pair
+                r = roots_all()
+                cu, cv = r[ce_src], r[ce_dst]
+                diff = cu != cv
+                key_cl = cu[diff] if direction == "succ" else cv[diff]
+                oth_cl = cv[diff] if direction == "succ" else cu[diff]
+                pairs = np.unique(key_cl * n + oth_cl)
+                keys, idx, cnt = np.unique(pairs // n, return_index=True,
+                                           return_counts=True)
                 # unique-neighbor merges, applied in (topo-first) order so
                 # chained merges respect the flops cap incrementally;
                 # cross-phase merges are forbidden (see Replication.phase)
-                cands = sorted((c for c, outs in degree.items()
-                                if len(outs) == 1
-                                and phase[c] == phase[outs[0]]),
-                               key=lambda c: (pos[c], c),
-                               reverse=direction == "pred")
-                for c in cands:
+                sel = cnt == 1
+                cands = keys[sel]
+                others = (pairs % n)[idx[sel]]
+                sel = phase[cands] == phase[others]
+                cands, others = cands[sel], others[sel]
+                order = np.lexsort((cands, pos[cands]))
+                if direction == "pred":
+                    order = order[::-1]
+                for c, oth in zip(cands[order].tolist(),
+                                  others[order].tolist()):
                     if n_clusters <= target:
                         break
                     rc = find(c)
                     if rc != c:                    # already absorbed this pass
                         continue
-                    ro = find(degree[c][0])
+                    ro = find(oth)
                     if ro == rc or cflops[rc] + cflops[ro] > cap:
                         continue
                     parent[rc] = ro
@@ -222,8 +347,9 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
             # bounded by the mean-flops budget (edges only go forward, so
             # the quotient over bins stays acyclic); one bin stream per
             # phase so packed bins never span phases either
-            roots = sorted({find(int(v)) for v in compute},
-                           key=lambda c: (pos[c], c))
+            root_of = roots_all()
+            uniq = np.unique(root_of[compute])
+            roots = uniq[np.lexsort((uniq, pos[uniq]))].tolist()
             phases = sorted({int(phase[c]) for c in roots})
             total = float(flops.sum())
             bin_of: dict[int, int] = {}
@@ -244,9 +370,10 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
                     bin_of[c] = b
                     acc += f
                 next_bin = b + 1
+            bin_arr = np.full(n, -1, dtype=np.int64)
+            bin_arr[roots] = [bin_of[c] for c in roots]
             pack = np.empty(n, dtype=np.int64)
-            for v in compute:
-                pack[v] = bin_of[find(int(v))]
+            pack[compute] = bin_arr[root_of[compute]]
 
             labels_compute = pack
         else:
@@ -259,8 +386,7 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
         labels[compute] = labels_compute[compute]
     else:
         # root ids, compacted later by _partition_from_labels
-        for v in compute:
-            labels[v] = find(int(v))
+        labels[compute] = roots_all()[compute]
 
     # input grouping: one cluster per distinct consumer-cluster set
     base = int(labels.max(initial=0)) + 1
@@ -275,26 +401,32 @@ def _coarsen_labels(g: DataflowGraph, target: int, cap_factor: float,
 
 
 def _partition_from_labels(g: DataflowGraph, raw: np.ndarray) -> Partition:
-    """Compact raw labels (topo-first order), build the segment graph."""
+    """Compact raw labels (topo-first order), build the segment graph.
+
+    Fully vectorized (no per-vertex/per-edge Python loops) so 100k+-vertex
+    graphs partition in tens of milliseconds; every reduction mirrors the
+    original sequential accumulation order bit-for-bit (``np.add.at``
+    applies additions in element order, and first-occurrence dedup uses
+    ``np.unique(..., return_index=True)``)."""
     n = g.n
     raw = np.asarray(raw, dtype=np.int64)
     pos = np.empty(n, dtype=np.int64)
     pos[g.topo_order] = np.arange(n)
 
-    first_pos: dict[int, int] = {}
-    first_vid: dict[int, int] = {}
-    for v in range(n):
-        lbl = int(raw[v])
-        if lbl not in first_pos or pos[v] < first_pos[lbl]:
-            first_pos[lbl] = int(pos[v])
-        if lbl not in first_vid or v < first_vid[lbl]:
-            first_vid[lbl] = v
-    order = sorted(first_pos, key=lambda lbl: (first_pos[lbl],
-                                               first_vid[lbl]))
-    seg_of_label = {lbl: s for s, lbl in enumerate(order)}
-    seg = np.array([seg_of_label[int(raw[v])] for v in range(n)],
-                   dtype=np.int64)
-    S = len(order)
+    # compact labels in topo-first order: each label's segment id is the
+    # rank of its earliest member position (labels partition the vertex
+    # set, so first positions are distinct; first_vid only tie-breaks the
+    # degenerate n == 0 shapes)
+    uniq, inv = np.unique(raw, return_inverse=True)
+    L = len(uniq)
+    first_pos = np.full(L, n, dtype=np.int64)
+    np.minimum.at(first_pos, inv, pos)
+    first_vid = np.full(L, n, dtype=np.int64)
+    np.minimum.at(first_vid, inv, np.arange(n))
+    rank = np.empty(L, dtype=np.int64)
+    rank[np.lexsort((first_vid, first_pos))] = np.arange(L)
+    seg = rank[inv]
+    S = L
 
     flops = g.flops_array()
     out_bytes = g.out_bytes_array()
@@ -309,57 +441,62 @@ def _partition_from_labels(g: DataflowGraph, raw: np.ndarray) -> Partition:
     # contributes its out_bytes once
     crosses_out = np.zeros(n, dtype=bool)
     E = g.edge_array()
-    cross_edges = []
+    cross_edges = np.zeros((0, 2), dtype=np.int64)
     if len(E):
         cross = seg[E[:, 0]] != seg[E[:, 1]]
         crosses_out[E[cross, 0]] = True
-        cross_edges = E[cross]
+        cross_edges = E[cross].astype(np.int64)
     boundary = np.zeros(S)
     np.add.at(boundary, seg[crosses_out], out_bytes[crosses_out])
 
     # segment edges + per-edge transfer byte totals (each producer counted
     # once per destination segment — the transfer-dedup convention of
-    # simulator.consumers_on)
-    edge_bytes: dict[tuple[int, int], float] = {}
-    seen_pairs: set[tuple[int, int]] = set()
-    for (u, v) in cross_edges:
-        key = (int(seg[u]), int(seg[v]))
-        pkey = (int(u), int(seg[v]))
-        if pkey in seen_pairs:
-            continue
-        seen_pairs.add(pkey)
-        edge_bytes[key] = edge_bytes.get(key, 0.0) + float(out_bytes[u])
+    # simulator.consumers_on): keep the first edge per (producer, dest
+    # segment) pair in edge order, then sum producer bytes per segment
+    # pair in that same order
+    if len(cross_edges):
+        cu, cv = cross_edges[:, 0], seg[cross_edges[:, 1]]
+        _, first = np.unique(cu * S + cv, return_index=True)
+        keep = np.sort(first)
+        ku, kv = cu[keep], cv[keep]
+        pair_key, pair_inv = np.unique(seg[ku] * S + kv,
+                                       return_inverse=True)
+        cross_arr = np.zeros(len(pair_key))
+        np.add.at(cross_arr, pair_inv, out_bytes[ku])
+        seg_edges = np.stack([pair_key // S, pair_key % S], axis=1)
+    else:
+        cross_arr = np.zeros(0)
+        seg_edges = np.zeros((0, 2), dtype=np.int64)
 
     # representative member per segment: the max-flops non-input member
-    # (lowest vid on ties) names the segment's kind/label
+    # (lowest vid on ties) names the segment's kind/label; input-only
+    # segments fall back to their lowest-vid member
     rep_member = np.full(S, -1, dtype=np.int64)
-    for v in range(n):
-        s = seg[v]
-        r = rep_member[s]
-        if r < 0 or (not is_input[v]
-                     and (is_input[r] or flops[v] > flops[r])):
-            rep_member[s] = v
+    nonin = np.flatnonzero(~is_input)
+    if len(nonin):
+        order = np.lexsort((nonin, -flops[nonin], seg[nonin]))
+        sv = seg[nonin][order]
+        first = np.ones(len(sv), dtype=bool)
+        first[1:] = sv[1:] != sv[:-1]
+        rep_member[sv[first]] = nonin[order][first]
+    lowest = np.full(S, n, dtype=np.int64)
+    np.minimum.at(lowest, seg, np.arange(n))
+    input_only = rep_member < 0
+    rep_member[input_only] = lowest[input_only]
 
-    out = DataflowGraph(f"{g.name}|seg{S}")
-    for s in range(S):
-        r = int(rep_member[s])
-        vert = g.vertices[r]
-        if is_input[r]:
-            out.add_vertex("input", out_bytes=float(seg_bytes[s]),
-                           label=f"seg{s}:{vert.label}" if vert.label
-                           else f"seg{s}")
-        else:
-            out.add_vertex(vert.kind, flops=float(seg_flops[s]),
-                           out_bytes=float(boundary[s]), meta_op=s,
-                           role="shard",
-                           label=f"seg{s}:{vert.label}" if vert.label
-                           else f"seg{s}")
-    for (s, t) in sorted(edge_bytes):
-        out.add_edge(s, t)
-    out.freeze()
-
-    cross_arr = np.array([edge_bytes[(s, t)] for (s, t) in out.edges],
-                         dtype=np.float64)
+    seg_in = is_input[rep_member]
+    rep_labels = [g.vertices[int(r)].label for r in rep_member]
+    out = DataflowGraph.from_arrays(
+        f"{g.name}|seg{S}",
+        ["input" if seg_in[s] else g.vertices[int(rep_member[s])].kind
+         for s in range(S)],
+        np.where(seg_in, 0.0, seg_flops),
+        np.where(seg_in, seg_bytes, boundary),
+        meta_op=np.where(seg_in, -1, np.arange(S)),
+        roles=["input" if seg_in[s] else "shard" for s in range(S)],
+        labels=[f"seg{s}:{lbl}" if lbl else f"seg{s}"
+                for s, lbl in enumerate(rep_labels)],
+        edges=seg_edges)
     return Partition(flat=g, seg_graph=out, vertex_segment=seg,
                      seg_flops=seg_flops, seg_bytes=seg_bytes,
                      boundary_bytes=boundary, cross_bytes=cross_arr)
@@ -413,54 +550,74 @@ def tile_graph(unit: DataflowGraph, n_rep: int, *,
     shared -= set(chain_in)
 
     meta_width = max((v.meta_op for v in unit.vertices), default=-1) + 1
-    out = DataflowGraph(name or f"{unit.name}x{n_rep}")
-    # vid_of[i][u] = flat vertex of unit vertex u in repetition i
-    vid_of = [dict() for _ in range(n_rep)]
-    flat_unit_vid: list[int] = []
-    flat_rep_of: list[int] = []
+    U = unit.n
 
-    def add_copy(i: int, u: int) -> int:
-        vert = unit.vertices[u]
-        lbl = vert.label if i == 0 else f"{rep_prefix}{i}.{vert.label}"
-        meta = vert.meta_op + i * meta_width if vert.meta_op >= 0 else -1
-        vid = out.add_vertex(vert.kind, vert.flops, vert.out_bytes,
-                             meta, vert.role, lbl, vert.out_shape)
-        flat_unit_vid.append(u)
-        flat_rep_of.append(i)
-        return vid
+    # --- which (repetition, unit vertex) cells materialize a flat vertex
+    # (streaming CSR construction: per-unit arrays tiled across reps, no
+    # per-repetition Python dicts — peak state is O(unit) + the output
+    # columns, and cost is numpy-vectorized over all reps at once)
+    shared_mask = np.zeros(U, dtype=bool)
+    shared_mask[list(shared)] = True
+    chain_out = np.full(U, -1, dtype=np.int64)      # chain input -> out vid
+    chain_step = np.zeros(U, dtype=np.int64)
+    for vin, (ov, step) in chain_in.items():
+        chain_out[vin] = ov
+        chain_step[vin] = step
+    is_chain = chain_out >= 0
 
-    for i in range(n_rep):
-        for u in range(unit.n):
-            if u in shared:
-                if i == 0:
-                    vid_of[0][u] = add_copy(0, u)
-                vid_of[i][u] = vid_of[0][u]
-            elif u in chain_in:
-                j = i - chain_in[u][1]
-                if 0 <= j < n_rep:
-                    continue            # replaced by rep j's output vertex
-                vid_of[i][u] = add_copy(i, u)
-            else:
-                vid_of[i][u] = add_copy(i, u)
+    jj = np.arange(n_rep)[:, None] - chain_step[None, :]    # (R, U) source rep
+    inside = is_chain[None, :] & (jj >= 0) & (jj < n_rep)
+    created = np.ones((n_rep, U), dtype=bool)
+    created[1:, shared_mask] = False                # shared: rep 0 only
+    created[inside] = False                 # chain inputs with a live source
+    flat_id = np.cumsum(created.ravel()).reshape(n_rep, U) - 1
 
-    edges: set[tuple[int, int]] = set()
-    for i in range(n_rep):
-        for (a, b) in unit.edges:
-            if a in chain_in:
-                ov, step = chain_in[a]
-                j = i - step
-                src = vid_of[j][ov] if 0 <= j < n_rep else vid_of[i][a]
-            else:
-                src = vid_of[i][a]
-            edges.add((src, vid_of[i][b]))
-    for (s, d) in sorted(edges):
-        out.add_edge(s, d)
-    out.outputs = [vid_of[n_rep - 1][ov] for ov in unit.outputs
-                   if ov in vid_of[n_rep - 1]]
-    out.freeze()
+    # resolve[i, u] = the flat vertex that "unit vertex u in repetition i"
+    # refers to: its own copy, rep 0's copy (shared), or the source
+    # repetition's chain-output copy (substituted chain input)
+    resolve = flat_id.copy()
+    resolve[:, shared_mask] = flat_id[0, shared_mask][None, :]
+    src_rep = np.broadcast_to(jj, (n_rep, U))[inside]
+    src_out = np.broadcast_to(chain_out[None, :], (n_rep, U))[inside]
+    resolve[inside] = resolve[src_rep, src_out]     # after shared substitution
 
-    unit_vid = np.asarray(flat_unit_vid, dtype=np.int64)
-    rep_of = np.asarray(flat_rep_of, dtype=np.int64)
+    # --- vertex columns, in the same row-major (rep, unit-vertex) order
+    # the incremental builder used
+    rep_idx, uvid = np.nonzero(created)
+    u_flops = unit.flops_array()
+    u_bytes = unit.out_bytes_array()
+    u_meta = np.asarray([v.meta_op for v in unit.vertices], dtype=np.int64)
+    kinds = [unit.vertices[u].kind for u in uvid]
+    roles = [unit.vertices[u].role for u in uvid]
+    shapes = [unit.vertices[u].out_shape for u in uvid]
+    labels = [unit.vertices[u].label if i == 0
+              else f"{rep_prefix}{i}.{unit.vertices[u].label}"
+              for i, u in zip(rep_idx.tolist(), uvid.tolist())]
+    metas = np.where(u_meta[uvid] >= 0,
+                     u_meta[uvid] + rep_idx * meta_width, -1)
+
+    # --- edges: map every unit edge through resolve for every rep, then
+    # unique (== the incremental builder's sorted(set(...)))
+    EU = unit.edge_array().astype(np.int64)
+    if len(EU):
+        src_all = resolve[:, EU[:, 0]].ravel()
+        dst_all = resolve[:, EU[:, 1]].ravel()
+        n_flat = int(created.sum())
+        ekeys = np.unique(src_all * n_flat + dst_all)
+        edges = np.stack([ekeys // n_flat, ekeys % n_flat], axis=1)
+    else:
+        edges = np.zeros((0, 2), dtype=np.int64)
+
+    last = n_rep - 1
+    outputs = [int(resolve[last, ov]) for ov in unit.outputs
+               if not (is_chain[ov] and inside[last, ov])]
+    out = DataflowGraph.from_arrays(
+        name or f"{unit.name}x{n_rep}", kinds, u_flops[uvid], u_bytes[uvid],
+        meta_op=metas, roles=roles, labels=labels, out_shapes=shapes,
+        edges=edges, outputs=outputs)
+
+    unit_vid = uvid.astype(np.int64)
+    rep_of = rep_idx.astype(np.int64)
     inner = getattr(unit, "replication", None)
     if inner is not None:
         out.replication = Replication(

@@ -97,6 +97,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "hierarchical placement")
     ap.add_argument("--refine-top-k", type=int, default=16,
                     help="boundary vertices re-placed per refinement round")
+    ap.add_argument("--hier-max-ratio", type=float, default=16.0,
+                    help="per-level contraction bound of the multi-level "
+                         "V-cycle; graphs within one ratio of SEGMENTS "
+                         "coarsen in a single level")
+    ap.add_argument("--hier-max-levels", type=int, default=16,
+                    help="hard cap on V-cycle depth")
     return ap
 
 
@@ -134,7 +140,9 @@ def main(argv=None):
         from ..core.hierarchy import HierarchyConfig
         hier_cfg = HierarchyConfig(n_segments=args.hierarchy,
                                    refine_rounds=args.refine_rounds,
-                                   refine_top_k=args.refine_top_k)
+                                   refine_top_k=args.refine_top_k,
+                                   max_ratio=args.hier_max_ratio,
+                                   max_levels=args.hier_max_levels)
 
     total = (args.stage1 + args.stage2 * args.stage2_batch
              + args.stage3 * args.stage3_batch)
@@ -152,8 +160,14 @@ def main(argv=None):
     # flat assignments (through ExpandingEngine when hierarchical).
     pg = trainer.g
     if hier_cfg is not None:
-        print(f"hierarchy: {g.n}-vertex graph -> {pg.n} segments "
-              f"(refine {args.refine_rounds}x{args.refine_top_k})")
+        sizes = " -> ".join(
+            str(p.seg_graph.n) for p in trainer.hier.partition.levels)
+        print(f"hierarchy: {g.n}-vertex graph -> {sizes} segments "
+              f"({trainer.hier.n_levels} level(s), "
+              f"refine {args.refine_rounds}x{args.refine_top_k})")
+        for st in trainer.hier.partition.level_stats:
+            print(f"  level {st['level']}: {st['n_in']} -> {st['n_out']} "
+                  f"(target {st['target']}) in {st['seconds']:.2f}s")
     sim = WCSimulator(pg, dev_twin, choose="fifo", noise_sigma=args.noise)
     if args.system == "executor":
         stage3_engine = ExecutorRewardEngine(executor, repeats=args.repeats)

@@ -1,0 +1,66 @@
+"""Unit tests for tools/bench_guard.py: the warn-only CI throughput
+guard.  Pure dict-in/list-out — no benchmark runs, no timing."""
+import importlib.util
+import pathlib
+import sys
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_guard",
+    pathlib.Path(__file__).parent.parent / "tools" / "bench_guard.py")
+bench_guard = importlib.util.module_from_spec(_SPEC)
+sys.modules["bench_guard"] = bench_guard
+_SPEC.loader.exec_module(bench_guard)
+
+
+def _hier_row(eps, n, **extra):
+    return {"eps_per_sec": eps, "n": n, **extra}
+
+
+def test_compare_flags_rate_drop_and_missing_row():
+    base = {"train/a": {"eps_per_sec": 100.0},
+            "train/gone": {"eps_per_sec": 50.0}}
+    cur = {"train/a": {"eps_per_sec": 10.0}}
+    warnings = bench_guard.compare(cur, base, tolerance=0.5)
+    assert any("train/a" in w for w in warnings)
+    assert any("train/gone" in w and "missing" in w for w in warnings)
+    # within tolerance: silent
+    assert not bench_guard.compare(
+        {"train/a": {"eps_per_sec": 60.0}},
+        {"train/a": {"eps_per_sec": 100.0}}, tolerance=0.5)
+
+
+def test_compare_full_only_rows_may_disappear():
+    """REPRO_FULL-only rows are exempt from the disappearance check —
+    a reduced CI run legitimately omits them — but keep their rate check
+    when present."""
+    base = {"hier/synth131072/place": {"makespan_ms": 1.0, "full_only": 1},
+            "hier/synth512/hier_update": _hier_row(30.0, 529)}
+    cur = {"hier/synth512/hier_update": _hier_row(30.0, 529)}
+    assert bench_guard.compare(cur, base, tolerance=0.5) == []
+    # without the marker the same omission warns
+    base_plain = {"hier/synth131072/place": {"makespan_ms": 1.0}}
+    assert len(bench_guard.compare({}, base_plain, tolerance=0.5)) == 1
+
+
+def test_check_hier_anchors_vertex_rate():
+    """Check 4: per-vertex update rate (eps_per_sec * n) of every
+    hier_update row vs the synth512 anchor, intra-run."""
+    anchor = bench_guard._HIER_ANCHOR
+    good = {anchor: _hier_row(30.0, 529),                  # ~15.9k verts/s
+            "hier/synth8192/hier_update": _hier_row(70.0, 8209),
+            "hier/synth512/flat_update": _hier_row(8.0, 529)}  # not matched
+    assert bench_guard.check_hier(good, tolerance=0.5) == []
+    bad = {anchor: _hier_row(30.0, 529),
+           "hier/synth8192/hier_update": _hier_row(0.5, 8209)}  # collapsed
+    warnings = bench_guard.check_hier(bad, tolerance=0.5)
+    assert len(warnings) == 1 and "synth8192" in warnings[0]
+    # no anchor row -> check is inert, never a KeyError
+    assert bench_guard.check_hier(
+        {"hier/synth8192/hier_update": _hier_row(0.5, 8209)},
+        tolerance=0.5) == []
+
+
+def test_vertex_rate_requires_both_fields():
+    assert bench_guard.vertex_rate({"eps_per_sec": 2.0, "n": 10}) == 20.0
+    assert bench_guard.vertex_rate({"eps_per_sec": 2.0}) is None
+    assert bench_guard.vertex_rate({"makespan_ms": 5.0}) is None

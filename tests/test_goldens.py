@@ -27,6 +27,11 @@ SEQ = 64                       # matches the zoo tests' trace shape
 # architecture keep the tiling path honest without importing all ten
 FULL_ARCHS = ("olmo_1b", "zamba2_1p2b")
 
+# 100k-vertex-class golden: full-depth qwen110b with a realistic
+# microbatch count — the streaming-import scale target (slow: the jax
+# unit trace dominates, ~40s)
+BIG_ARCH, BIG_MB = "qwen1p5_110b", 8
+
 
 def fingerprint(g) -> dict:
     return {
@@ -70,10 +75,19 @@ def test_zoo_full_goldens(arch, update_goldens):
     assert g.replication.n_rep > 1
 
 
+@pytest.mark.slow
+def test_zoo_big_full_golden(update_goldens):
+    g = get_workload(f"model:{BIG_ARCH}:full", seq=SEQ,
+                     microbatches=BIG_MB)
+    assert g.n >= 100_000                # the streaming-import bar
+    check_or_update(f"{BIG_ARCH}_full_mb{BIG_MB}", g, update_goldens)
+
+
 def test_goldens_have_no_strays():
     """Every checked-in golden corresponds to a current zoo entry."""
     if not GOLDEN_DIR.exists():
         pytest.skip("no goldens yet")
-    expected = set(ARCH_IDS) | {f"{a}_full" for a in FULL_ARCHS}
+    expected = (set(ARCH_IDS) | {f"{a}_full" for a in FULL_ARCHS}
+                | {f"{BIG_ARCH}_full_mb{BIG_MB}"})
     present = {p.stem for p in GOLDEN_DIR.glob("*.json")}
     assert present <= expected, present - expected

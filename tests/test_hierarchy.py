@@ -19,14 +19,19 @@ from repro.core.devices import get_device_model, uniform_box
 from repro.core.engine import SimRewardEngine
 from repro.core.heuristics import critical_path_assignment
 from repro.core.hierarchy import (ExpandingEngine, HierarchicalPolicy,
-                                  HierarchyConfig, boundary_scores)
+                                  HierarchyConfig, boundary_scores,
+                                  propose_moves)
 from repro.core.policy_io import load_policy, save_policy
 from repro.core.simulator import WCSimulator
 from repro.core.training import DopplerTrainer
-from repro.graphs.partition import Partition, coarsen, tile_graph
+from repro.graphs.partition import (MultilevelPartition, Partition, coarsen,
+                                    coarsen_multilevel, tile_graph)
 from repro.graphs.workloads import get_workload, synthetic_layered
 
 HCFG = HierarchyConfig(n_segments=12, refine_rounds=2, refine_top_k=6)
+# small max_ratio forces a genuinely multi-level stack on medium graphs
+MHCFG = HierarchyConfig(n_segments=12, refine_rounds=2, refine_top_k=6,
+                        max_ratio=4.0)
 
 
 def small_trainer(g, dev, hierarchy=HCFG, **kw):
@@ -126,6 +131,126 @@ def test_full_model_import_scale_and_fast_path():
     # microbatches share parameters: mb copies reuse input vertices
     g1 = get_workload("model:olmo_1b:full", seq=64, microbatches=1)
     assert g.n < 2 * g1.n
+
+
+# ------------------------------------------------------- multi-level stack
+def test_coarsen_multilevel_single_level_identity():
+    """A graph within one max_ratio of the target coarsens in exactly one
+    level, identical to the plain single-shot coarsen."""
+    g = synthetic_layered(12, 6)
+    ml = coarsen_multilevel(g, 12, max_ratio=16.0)
+    assert ml.n_levels == 1
+    np.testing.assert_array_equal(ml.vertex_segment,
+                                  coarsen(g, 12).vertex_segment)
+    assert ml.seg_graph.n == ml.levels[0].seg_graph.n
+
+
+def test_coarsen_multilevel_bounded_ratio_stack():
+    g = synthetic_layered(48, 8)
+    ml = coarsen_multilevel(g, 8, max_ratio=4.0)
+    assert ml.n_levels >= 2
+    sizes = [g.n] + [p.seg_graph.n for p in ml.levels]
+    assert sizes == sorted(sizes, reverse=True)     # monotone shrink
+    # composite map == composition of the per-level maps
+    composed = np.arange(g.n)
+    for part in ml.levels:
+        composed = part.vertex_segment[composed]
+    np.testing.assert_array_equal(ml.vertex_segment, composed)
+    # per-level stats recorded for every level
+    assert len(ml.level_stats) == ml.n_levels
+    # compute cost conserved through the whole stack
+    np.testing.assert_allclose(ml.seg_graph.total_flops(),
+                               g.total_flops(), rtol=1e-9)
+    # expand through the stack == composite-map expand
+    rng = np.random.default_rng(0)
+    seg_a = rng.integers(0, 4, size=ml.n_segments)
+    a = seg_a
+    for part in reversed(ml.levels):
+        a = part.expand(a)
+    np.testing.assert_array_equal(ml.expand(seg_a), a)
+
+
+def test_vcycle_refine_levels_monotone(dev4):
+    g = synthetic_layered(48, 8)
+    ml = coarsen_multilevel(g, 8, max_ratio=4.0)
+    pol = HierarchicalPolicy(ml, MHCFG, dev4)
+    rng = np.random.default_rng(1)
+    top_a = rng.integers(0, dev4.n, size=ml.seg_graph.n)
+    flat = pol.refine_levels(top_a, episode=3)
+    assert flat.shape == (g.n,)
+    assert (flat >= 0).all() and (flat < dev4.n).all()
+    # every intermediate level's refinement is monotone under its exact
+    # noise-free engine, and stats cover every level above the flat one
+    assert len(pol.vcycle_stats) == ml.n_levels - 1
+    for st in pol.vcycle_stats:
+        assert st["t_out"] <= st["t_in"] + 1e-12
+
+
+def test_multilevel_place_beats_segment_cp(dev4):
+    g = synthetic_layered(48, 8)
+    tr = small_trainer(g, dev4, hierarchy=MHCFG)
+    assert tr.hier.n_levels >= 2
+    tr.stage2_sim_batched(2, batch_size=4)
+    a, t = tr.place()
+    assert a.shape == (g.n,)
+    flat_eval = WCSimulator(g, dev4, choose="fifo", noise_sigma=0.0)
+    cp_seg = tr.hier.expand(critical_path_assignment(tr.g, dev4, seed=0))
+    assert t <= flat_eval.batch_engine.exec_time(cp_seg) + 1e-12
+
+
+def test_propose_moves_matches_loop_reference(dev4):
+    """The vectorized move proposal is bit-identical to the per-vertex
+    loops it replaced (same moves, same order, same candidate rows)."""
+    def reference(g, a, top_k, exec_cost, nd):
+        cands, moves, seen = [], [], set()
+
+        def propose(v, d):
+            if d != int(a[v]) and (v, d) not in seen:
+                seen.add((v, d))
+                b = a.copy()
+                b[v] = d
+                cands.append(b)
+                moves.append((v, d))
+
+        scores = boundary_scores(g, a)
+        top = np.argsort(-scores, kind="stable")[:top_k]
+        top = top[scores[top] > 0]
+        for v in top.tolist():
+            near = ({int(a[p]) for p in g.preds[v] if not g.is_input(p)}
+                    | {int(a[s]) for s in g.succs[v]})
+            near.discard(int(a[v]))
+            for d in sorted(near):
+                propose(v, d)
+        if exec_cost is not None:
+            own = exec_cost[np.arange(g.n), a]
+            load = np.zeros(nd)
+            np.add.at(load, a, own)
+            dmax = int(load.argmax())
+            dmins = np.argsort(load, kind="stable")[:2]
+            on_max = np.flatnonzero(a == dmax)
+            on_max = on_max[np.argsort(-own[on_max],
+                                       kind="stable")][:max(top_k // 2, 4)]
+            for v in on_max.tolist():
+                if own[v] <= 0:
+                    continue
+                for d in dmins.tolist():
+                    propose(v, int(d))
+        return cands, moves
+
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        g = random_dag(rng, 50)
+        part = coarsen(g, 10)
+        pol = HierarchicalPolicy(part, HCFG, dev4)
+        a = rng.integers(0, dev4.n, size=g.n)
+        for cost in (pol.exec_cost, None):
+            cands, moves = propose_moves(g, a, 8, cost, dev4.n)
+            ref_c, ref_m = reference(g, a, 8, cost, dev4.n)
+            assert moves == ref_m
+            if ref_c:
+                np.testing.assert_array_equal(cands, np.stack(ref_c))
+            else:
+                assert cands.shape == (0, g.n)
 
 
 # ------------------------------------------------------------- refinement
@@ -238,6 +363,59 @@ def test_hierarchical_checkpoint_resume_exact(tmp_path, dev4):
     hist2 = [(r.episode, r.exec_time) for r in tr2.history]
     assert ref_hist[-3:] == hist2[-3:]
     np.testing.assert_array_equal(ref_greedy, tr2.greedy_assignment())
+
+
+def test_multilevel_checkpoint_resume_exact(tmp_path, dev4):
+    """The V-cycle level stack round-trips: a resumed multi-level trainer
+    continues Stage II bit-identically, and the checkpoint carries every
+    level's vertex->segment map."""
+    g = synthetic_layered(48, 8)
+    sim_kw = dict(choose="fifo", noise_sigma=0.05)
+
+    def fresh():
+        return small_trainer(g, dev4, hierarchy=MHCFG)
+
+    tr = fresh()
+    assert tr.hier.n_levels >= 2
+    sim = WCSimulator(tr.g, dev4, **sim_kw)
+    tr.stage2_sim_batched(3, sim, batch_size=4)
+    tr.place()
+    save_policy(tmp_path, tr)
+    tr.stage2_sim_batched(3, sim, batch_size=4)
+    ref_params = tr.params
+    ref_greedy = tr.greedy_assignment()
+
+    tr2 = fresh()
+    load_policy(tmp_path, tr2)
+    np.testing.assert_array_equal(tr2.hier.refine_state.assignment,
+                                  tr.hier.refine_state.assignment)
+    tr2.stage2_sim_batched(3, WCSimulator(tr2.g, dev4, **sim_kw),
+                           batch_size=4)
+    assert params_equal(ref_params, tr2.params)
+    np.testing.assert_array_equal(ref_greedy, tr2.greedy_assignment())
+
+
+def test_multilevel_checkpoint_level_stack_mismatch_raises(tmp_path, dev4):
+    g = synthetic_layered(48, 8)
+    ml_tr = small_trainer(g, dev4, hierarchy=MHCFG)
+    assert ml_tr.hier.n_levels >= 2
+    save_policy(tmp_path / "ml", ml_tr)
+    # a checkpoint saved WITHOUT the level stack (pre-V-cycle format)
+    # only restores into a single-level trainer
+    state = ml_tr.hier.state_dict()
+    legacy = {k: v for k, v in state.items()
+              if k not in ("level_maps", "n_levels")}
+    with pytest.raises(ValueError, match="partition"):
+        ml_tr.hier.load_state_dict(legacy)
+    single = small_trainer(
+        g, dev4, hierarchy=dataclasses.replace(MHCFG, max_ratio=1e9))
+    assert single.hier.n_levels == 1
+    legacy1 = {k: v for k, v in single.hier.state_dict().items()
+               if k not in ("level_maps", "n_levels")}
+    single.hier.load_state_dict(legacy1)        # 1-level: legacy accepted
+    # level-count mismatch between stack depths
+    with pytest.raises(ValueError, match="partition"):
+        load_policy(tmp_path / "ml", single)
 
 
 def test_checkpoint_level_mismatch_raises(tmp_path, dev4):

@@ -183,3 +183,34 @@ def test_out_bytes_non_float_dtypes():
         by_label.setdefault(v.label, v)
     assert by_label["argmax"].out_bytes >= 16 * 4     # int32/int64 indices
     assert by_label["gt"].out_bytes == pytest.approx(16 * 16 * 1)  # bool
+
+
+def test_full_import_cache_byte_budget(monkeypatch, capsys):
+    """The full-graph cache is budgeted in bytes, not entries: exceeding
+    REPRO_ZOO_CACHE_BYTES evicts LRU-first (logged), oversized graphs
+    pass through uncached, and hits return the identical object."""
+    from repro.graphs import model_zoo as mz
+    mz._import_model_full.cache_clear()
+    g1 = mz.import_model_full("olmo_1b", seq=64, microbatches=1, n_layers=4)
+    # room for the 2-microbatch graph (~2x g1) but not for both at once
+    budget = int(g1.nbytes_estimate() * 2.3)
+    monkeypatch.setenv("REPRO_ZOO_CACHE_BYTES", str(budget))
+    try:
+        assert mz.import_model_full("olmo_1b", seq=64, microbatches=1,
+                                    n_layers=4) is g1          # hit
+        mz.import_model_full("olmo_1b", seq=64, microbatches=2,
+                             n_layers=4)                       # evicts g1
+        info = mz._import_model_full.cache_info()
+        assert info["evictions"] >= 1
+        assert info["bytes"] <= info["max_bytes"]
+        assert "cache evict" in capsys.readouterr().err
+        g1b = mz.import_model_full("olmo_1b", seq=64, microbatches=1,
+                                   n_layers=4)
+        assert g1b is not g1 and g1b.n == g1.n                 # refetched
+        # a graph larger than the entire budget is returned uncached
+        monkeypatch.setenv("REPRO_ZOO_CACHE_BYTES", "1000")
+        mz._import_model_full.cache_clear()
+        mz.import_model_full("olmo_1b", seq=64, microbatches=1, n_layers=4)
+        assert mz._import_model_full.cache_info()["entries"] == 0
+    finally:
+        mz._import_model_full.cache_clear()

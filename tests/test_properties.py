@@ -28,7 +28,7 @@ from conftest import random_dag
 from repro.core.devices import (DeviceModel, mixed_generation_box,
                                 straggler_box, uniform_box)
 from repro.core.simulator import WCSimulator, synchronous_exec_time
-from repro.graphs.partition import coarsen
+from repro.graphs.partition import coarsen, coarsen_multilevel
 
 FLEETS = {
     "uniform3": lambda: uniform_box(3),
@@ -166,6 +166,60 @@ def test_coarsen_expand_round_trip(seed, n, target, nd):
 
     # determinism: same graph + target -> identical partition
     again = coarsen(g, target)
+    np.testing.assert_array_equal(seg, again.vertex_segment)
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(20, 80),
+       target=st.integers(2, 8), ratio=st.sampled_from([2.0, 3.0, 16.0]),
+       nd=st.integers(2, 4))
+def test_multilevel_coarsen_expand_round_trip(seed, n, target, ratio, nd):
+    """The V-cycle stack keeps the single-level contract at every level:
+    conservation through the composite map, monotone level sizes,
+    acyclicity (every level graph freezes), composition-consistent
+    expansion, and determinism."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    ml = coarsen_multilevel(g, target, max_ratio=ratio)
+    seg = ml.vertex_segment
+    assert seg.shape == (g.n,)
+    assert seg.min() >= 0 and seg.max() < ml.seg_graph.n
+
+    # composite map == composition of the per-level maps
+    composed = np.arange(g.n)
+    for part in ml.levels:
+        composed = part.vertex_segment[composed]
+    np.testing.assert_array_equal(seg, composed)
+
+    # monotone shrink, and every level graph is a frozen (acyclic) DAG
+    sizes = [g.n] + [p.seg_graph.n for p in ml.levels]
+    assert sizes == sorted(sizes, reverse=True)
+    for part in ml.levels:
+        assert part.seg_graph.topo_order is not None   # freeze() passed
+
+    # conservation end to end
+    np.testing.assert_allclose(ml.seg_graph.total_flops(),
+                               g.total_flops(), rtol=1e-9)
+
+    # expand: composite-map expand == walking the stack level by level;
+    # batch expand agrees with row-wise expand
+    seg_a = rng.integers(0, nd, size=ml.n_segments)
+    a = seg_a
+    for part in reversed(ml.levels):
+        a = part.expand(a)
+    np.testing.assert_array_equal(ml.expand(seg_a), a)
+    batch = rng.integers(0, nd, size=(3, ml.n_segments))
+    np.testing.assert_array_equal(
+        ml.expand(batch), np.stack([ml.expand(r) for r in batch]))
+
+    # a large ratio collapses the stack to one level == plain coarsen
+    if ratio >= 16.0 and ml.n_levels == 1:
+        np.testing.assert_array_equal(
+            seg, coarsen(g, target).vertex_segment)
+
+    # determinism
+    again = coarsen_multilevel(g, target, max_ratio=ratio)
+    assert again.n_levels == ml.n_levels
     np.testing.assert_array_equal(seg, again.vertex_segment)
 
 

@@ -12,7 +12,9 @@ Three checks run:
 
 1. **Baseline rates** — every rate-style metric (``upd_per_sec``,
    ``eps_per_sec``, ...) in the baseline must be within ``tolerance`` of
-   the fresh run's, and no baseline row may disappear.
+   the fresh run's, and no baseline row may disappear.  Baseline rows
+   marked ``full_only=1`` are exempt from the disappearance check: they
+   exist only under ``REPRO_FULL`` budgets, which CI doesn't run.
 2. **Per-episode rates** — each row's episodes/sec is derived
    (``eps_per_sec`` directly, else ``upd_per_sec * batch``) and compared
    against the baseline row's.  This catches the failure mode raw
@@ -25,6 +27,15 @@ Three checks run:
    episode throughput; a large-batch row running slower per episode
    than the anchor means chunking/sharding regressed, whatever the
    baseline file says.
+4. **Hierarchy scaling (intra-run)** — every ``hier/*/hier_update``
+   row's per-VERTEX update rate (``eps_per_sec * n``: flat vertices
+   placed per second of Stage-II training) must keep at least
+   ``1 - tolerance`` of the ``hier/synth512/hier_update`` anchor's.
+   The whole point of the V-cycle is that segment-graph rollout cost
+   stays flat while ``n`` grows, so vertex throughput must *rise* with
+   scale; a big-graph row dropping below the smallest graph's rate
+   means coarsening stopped containing the rollout cost.  Warn-only,
+   like the rest.
 
 The verdict (``ok`` | ``regression`` plus the warning list) is written
 back into the fresh BENCH JSON under a top-level ``guard`` key, so the
@@ -47,6 +58,8 @@ import sys
 
 RATE_KEYS = ("upd_per_sec", "eps_per_sec", "calls_per_sec", "rows_per_sec")
 _LARGE_BATCH_RE = re.compile(r"^(train_.+_fused)_b(\d+)$")
+_HIER_ANCHOR = "hier/synth512/hier_update"
+_HIER_UPDATE_RE = re.compile(r"^hier/.+/hier_update$")
 
 
 def load_doc(path: str) -> dict:
@@ -74,8 +87,11 @@ def compare(current: dict[str, dict], baseline: dict[str, dict],
     warnings = []
     for name, base_derived in sorted(baseline.items()):
         if name not in current:
-            warnings.append(f"row '{name}' present in baseline but "
-                            f"missing from the fresh run")
+            # rows marked full_only=1 exist only under REPRO_FULL budgets;
+            # a reduced CI run legitimately omits them
+            if not base_derived.get("full_only"):
+                warnings.append(f"row '{name}' present in baseline but "
+                                f"missing from the fresh run")
             continue
         cur_derived = current[name]
         for key in RATE_KEYS:
@@ -128,6 +144,38 @@ def check_scaling(current: dict[str, dict], tolerance: float) -> list[str]:
     return warnings
 
 
+def vertex_rate(derived: dict) -> float | None:
+    """Flat vertices placed per second of Stage-II training: the graph's
+    size times its episode rate.  The V-cycle's scaling claim in one
+    number — it must grow with ``n``, not collapse."""
+    if "eps_per_sec" in derived and "n" in derived:
+        return float(derived["eps_per_sec"]) * float(derived["n"])
+    return None
+
+
+def check_hier(current: dict[str, dict], tolerance: float) -> list[str]:
+    """Check 4: hier rows' per-vertex update rate vs the synth512 anchor,
+    within the fresh run only (host-relative, immune to baseline skew)."""
+    warnings = []
+    anchor = current.get(_HIER_ANCHOR)
+    a_rate = vertex_rate(anchor) if anchor is not None else None
+    if not a_rate:
+        return warnings
+    for name in sorted(current):
+        if name == _HIER_ANCHOR or not _HIER_UPDATE_RE.match(name):
+            continue
+        c_rate = vertex_rate(current[name])
+        if c_rate is None:
+            continue
+        if c_rate < a_rate * (1.0 - tolerance):
+            warnings.append(
+                f"{name}: vertex update rate {c_rate:.0f}/s fell below "
+                f"{1.0 - tolerance:.0%} of the synth512 anchor's "
+                f"{a_rate:.0f}/s — coarsening no longer contains the "
+                f"rollout cost at n={current[name].get('n', '?')}")
+    return warnings
+
+
 def record_verdict(path: str, doc: dict, verdict: str,
                    warnings: list[str], tolerance: float,
                    baseline_path: str, checked: int) -> None:
@@ -163,7 +211,8 @@ def main(argv: list[str] | None = None) -> int:
         return 1
 
     warnings = (compare(current, baseline, args.tolerance)
-                + check_scaling(current, args.tolerance))
+                + check_scaling(current, args.tolerance)
+                + check_hier(current, args.tolerance))
     verdict = "regression" if warnings else "ok"
     record_verdict(args.current, cur_doc, verdict, warnings,
                    args.tolerance, args.baseline, len(baseline))
