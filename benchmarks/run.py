@@ -34,6 +34,7 @@ MODULES = [
      {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}),
     ("exec", "bench_executor", {}),
     ("serve", "bench_serving", {}),
+    ("dyn", "bench_dynamic", {}),
     ("table1", "table1_wc_vs_sync", {}),
     ("table2", "table2_methods", {}),
     ("table3", "table3_ablation", {}),

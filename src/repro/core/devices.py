@@ -265,15 +265,23 @@ def two_pod_fleet(rows: int = 2, cols: int = 2,
 
 
 def straggler_box(n: int = 8, straggler: int = 0,
-                  slowdown: float = 0.5) -> DeviceModel:
+                  slowdown: float = 0.5,
+                  mem_bytes: float = 16e9) -> DeviceModel:
     """Uniform box with one device running at `slowdown` x the fleet rate —
-    the classic mixed-bin / thermally-throttled straggler scenario."""
+    the classic mixed-bin / thermally-throttled straggler scenario.
+
+    Capacity is routed through the constructor (NOT patched onto the
+    instance afterwards) so ``__post_init__`` normalization applies and
+    ``fingerprint()`` covers it from the first call — derived fleets
+    (``FleetEvent.apply``, ``scale_fleet``) see a stable, capacity-aware
+    hash."""
     base = uniform_box(n)
     speed = np.ones(n)
     speed[straggler] = slowdown
-    out = scale_fleet(base, speed=speed, name=f"straggler{n}")
-    out.mem_bytes = np.full(n, 16e9)
-    return out
+    return DeviceModel(base.flops_per_sec * speed, base.link_bw,
+                       base.link_latency, exec_overhead=base.exec_overhead,
+                       mem_bytes=np.full(n, float(mem_bytes)),
+                       name=f"straggler{n}")
 
 
 PRESETS = {
@@ -297,3 +305,143 @@ def get_device_model(name: str) -> DeviceModel:
     if name not in PRESETS:
         raise KeyError(f"unknown device preset {name!r}; have {sorted(PRESETS)}")
     return PRESETS[name]()
+
+
+# ------------------------------------------------------------- fleet events
+EVENT_KINDS = ("device_loss", "straggler_onset", "straggler_recovery",
+               "link_degradation")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """One fleet-churn event: applying it to a :class:`DeviceModel` yields
+    the derived (degraded/recovered) fleet plus a survivor map.
+
+    kind:    'device_loss'        — device ``device`` disappears; the fleet
+                                    shrinks by one and every other device
+                                    is re-indexed.
+             'straggler_onset'    — ``device`` slows to ``factor`` x its
+                                    compute rate (thermal throttle, noisy
+                                    neighbor, failing HBM ...).
+             'straggler_recovery' — the inverse: ``device`` speeds back up
+                                    by ``1/factor`` (same ``factor`` as the
+                                    onset restores the original rate).
+             'link_degradation'   — the ``device -> dst`` link bandwidth
+                                    drops to ``factor`` x; ``dst=-1``
+                                    degrades every link touching
+                                    ``device`` (both directions) — a
+                                    flapping NIC / oversubscribed switch.
+    device:  the affected device index (source side for link events).
+    dst:     link destination for 'link_degradation' (-1 = all links of
+             ``device``); ignored otherwise.
+    factor:  multiplier (< 1 degrades).
+
+    ``apply`` always constructs the derived fleet through the
+    ``DeviceModel`` constructor (never by mutating arrays on a live
+    instance), so ``__post_init__`` invariants hold and ``fingerprint()``
+    of the derived fleet is stable and distinct from the base fleet's —
+    the (topo_hash, fingerprint) serving-cache key stays correct across
+    fleet churn.
+    """
+    kind: str
+    device: int = 0
+    dst: int = -1
+    factor: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown fleet-event kind {self.kind!r}; "
+                             f"have {EVENT_KINDS}")
+        if not (self.factor > 0):
+            raise ValueError(f"factor must be positive, got {self.factor}")
+
+    def apply(self, fleet: DeviceModel) -> tuple[DeviceModel, np.ndarray]:
+        """-> (derived fleet, survivor map).
+
+        The survivor map is ``(fleet.n,)`` int64: old device index -> new
+        device index, with ``-1`` marking a lost device.  Non-loss events
+        return the identity map."""
+        n = fleet.n
+        if not (0 <= self.device < n):
+            raise ValueError(f"event device {self.device} out of range for "
+                             f"{fleet.name} (n={n})")
+        smap = np.arange(n, dtype=np.int64)
+        if self.kind == "device_loss":
+            if n <= 1:
+                raise ValueError("cannot lose the last device")
+            keep = np.arange(n) != self.device
+            smap = np.where(keep, np.cumsum(keep) - 1, -1).astype(np.int64)
+            mem = (fleet.mem_bytes[keep]
+                   if fleet.mem_bytes is not None else None)
+            ov = (fleet.exec_overhead[keep]
+                  if isinstance(fleet.exec_overhead, np.ndarray)
+                  else fleet.exec_overhead)
+            out = DeviceModel(fleet.flops_per_sec[keep],
+                              fleet.link_bw[np.ix_(keep, keep)],
+                              fleet.link_latency[np.ix_(keep, keep)],
+                              exec_overhead=ov, mem_bytes=mem,
+                              name=f"{fleet.name}-loss{self.device}")
+            return out, smap
+        if self.kind in ("straggler_onset", "straggler_recovery"):
+            mult = (self.factor if self.kind == "straggler_onset"
+                    else 1.0 / self.factor)
+            flops = fleet.flops_per_sec.copy()
+            flops[self.device] *= mult
+            suffix = ("slow" if self.kind == "straggler_onset" else "rec")
+            return fleet.replace(
+                flops_per_sec=flops,
+                name=f"{fleet.name}-{suffix}{self.device}"), smap
+        # link_degradation
+        bw = fleet.link_bw.copy()
+        if self.dst < 0:
+            bw[self.device, :] *= self.factor
+            bw[:, self.device] *= self.factor
+        else:
+            if not (0 <= self.dst < n):
+                raise ValueError(f"event dst {self.dst} out of range for "
+                                 f"{fleet.name} (n={n})")
+            bw[self.device, self.dst] *= self.factor
+        np.fill_diagonal(bw, np.inf)
+        return fleet.replace(
+            link_bw=bw, name=f"{fleet.name}-link{self.device}"), smap
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def device_loss(cls, device: int) -> "FleetEvent":
+        return cls("device_loss", device=device)
+
+    @classmethod
+    def straggler_onset(cls, device: int, factor: float = 0.5) -> "FleetEvent":
+        return cls("straggler_onset", device=device, factor=factor)
+
+    @classmethod
+    def straggler_recovery(cls, device: int,
+                           factor: float = 0.5) -> "FleetEvent":
+        return cls("straggler_recovery", device=device, factor=factor)
+
+    @classmethod
+    def link_degradation(cls, device: int, dst: int = -1,
+                         factor: float = 0.25) -> "FleetEvent":
+        return cls("link_degradation", device=device, dst=dst, factor=factor)
+
+
+def parse_event(spec: str) -> FleetEvent:
+    """'kind:device[:factor[:dst]]' -> :class:`FleetEvent`.
+
+    Examples: ``device_loss:2``, ``straggler_onset:1:0.4``,
+    ``link_degradation:0:0.25:3`` (dst 3), ``link_degradation:0:0.25``
+    (all links of device 0).  ``straggler:d[:f]`` is accepted as an
+    alias for ``straggler_onset``."""
+    parts = spec.strip().split(":")
+    kind = {"straggler": "straggler_onset",
+            "loss": "device_loss",
+            "link": "link_degradation"}.get(parts[0], parts[0])
+    if len(parts) < 2:
+        raise ValueError(f"event spec {spec!r} needs 'kind:device'")
+    device = int(parts[1])
+    kw = {}
+    if len(parts) > 2:
+        kw["factor"] = float(parts[2])
+    if len(parts) > 3:
+        kw["dst"] = int(parts[3])
+    return FleetEvent(kind, device=device, **kw)

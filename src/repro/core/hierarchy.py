@@ -27,6 +27,7 @@ assignment.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -35,7 +36,7 @@ from .engine import RewardEngine, as_engine
 from .graph import DataflowGraph
 
 __all__ = ["HierarchyConfig", "RefineState", "HierarchicalPolicy",
-           "ExpandingEngine"]
+           "ExpandingEngine", "project_assignment", "refine_assignment"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +157,106 @@ def propose_moves(g: DataflowGraph, a: np.ndarray, top_k: int,
     return cands, moves
 
 
+def project_assignment(g: DataflowGraph, new_dev, assignment,
+                       survivor_map) -> np.ndarray:
+    """Warm-start projection of a placement onto a post-event fleet.
+
+    Vertices on surviving devices keep their (re-indexed) device; vertices
+    orphaned by a device loss are redistributed greedily — heaviest
+    orphan first onto the currently least-loaded surviving device (LPT),
+    load measured in exec seconds on the NEW fleet — so the projection is
+    feasible and roughly balanced before any refinement runs.  Works on
+    any graph level (flat or segment) as long as ``assignment`` indexes
+    that graph's vertices."""
+    a = np.asarray(assignment, dtype=np.int64)
+    smap = np.asarray(survivor_map, dtype=np.int64)
+    if a.min() < 0 or a.max() >= len(smap):
+        raise ValueError(f"assignment references device "
+                         f"{int(a.max())} outside the survivor map "
+                         f"({len(smap)} devices)")
+    out = smap[a]
+    orphans = np.flatnonzero(out < 0)
+    if not len(orphans):
+        return out
+    nd = int(new_dev.n) if hasattr(new_dev, "n") else int(new_dev)
+    if hasattr(new_dev, "flops_per_sec"):
+        cost = (new_dev.exec_overhead_vec[None, :]
+                + g.flops_array()[:, None]
+                / new_dev.flops_per_sec[None, :])
+        cost[g.input_mask()] = 0.0
+    else:
+        cost = np.repeat(g.flops_array()[:, None], nd, axis=1)
+        cost[g.input_mask()] = 0.0
+    load = np.zeros(nd)
+    placed = out >= 0
+    np.add.at(load, out[placed], cost[np.flatnonzero(placed),
+                                      out[placed]])
+    order = orphans[np.argsort(-cost[orphans].mean(axis=1), kind="stable")]
+    for v in order:
+        d = int(np.argmin(load + cost[v]))
+        out[v] = d
+        load[d] += cost[v, d]
+    return out
+
+
+def refine_assignment(g: DataflowGraph, exec_cost, assignment, engine,
+                      nd: int, episode: int = 0, rounds: int = 2,
+                      top_k: int = 16, deadline: float | None = None
+                      ) -> tuple[np.ndarray, float, int, int]:
+    """Graph-generic bounded monotone refinement (flat graph or a V-cycle
+    level): per round, communication + balance moves are proposed
+    (:func:`propose_moves`) and all candidates scored in ONE batched
+    ``exec_times`` call; the best single move competes against the greedy
+    combination of every individually-improving move.  Monotone w.r.t.
+    ``engine``: the result never scores worse than the input.
+
+    ``deadline`` (a ``time.perf_counter()`` instant) bounds wall clock:
+    no new round starts past it — the hook that makes re-placement's
+    ``budget_s`` contract hold while keeping monotonicity (rounds already
+    in flight complete; the loop just stops early).
+
+    Returns ``(assignment, exec_time, rounds_done, moves_applied)``."""
+    eng = as_engine(engine)
+    a = np.asarray(assignment, dtype=np.int64).copy()
+    t = float(eng.exec_times(a[None, :], episode)[0])
+    rounds_done = moves_applied = 0
+    for r in range(rounds):
+        if deadline is not None and time.perf_counter() >= deadline:
+            break
+        cands, moves = propose_moves(g, a, top_k, exec_cost, nd)
+        if not moves:
+            break
+        ts = np.asarray(eng.exec_times(cands, episode + 1 + r),
+                        dtype=float)
+        rounds_done += 1
+        order = np.argsort(ts, kind="stable")
+        if ts[order[0]] >= t:
+            break
+        # greedy combination of every individually-improving move vs
+        # the best single move (one more 2-row call)
+        combined = a.copy()
+        moved: set[int] = set()
+        for i in order.tolist():
+            v, d = moves[i]
+            if ts[i] < t and v not in moved:
+                combined[v] = d
+                moved.add(v)
+        pair = np.stack([combined, cands[order[0]]])
+        t2 = np.asarray(eng.exec_times(pair, episode + 101 + r),
+                        dtype=float)
+        if t2[0] <= t2[1] and t2[0] < t:
+            a, t = combined, float(t2[0])
+            moves_applied += len(moved)
+        elif t2[1] < t:
+            a, t = pair[1], float(t2[1])
+            moves_applied += 1
+        else:
+            # noisy engines can re-score the "improving" move worse;
+            # keep monotonicity and stop
+            break
+    return a, float(t), rounds_done, moves_applied
+
+
 class HierarchicalPolicy:
     """Expansion + level-by-level refinement over a partition stack.
 
@@ -202,6 +303,18 @@ class HierarchicalPolicy:
         """Flat-graph (level 0) exec-cost table."""
         return self.exec_cost_at(0)
 
+    def rebind_devices(self, devices) -> None:
+        """Point the policy at a (derived) fleet after a fleet event: the
+        partition stack is graph-only and survives unchanged, but every
+        device-derived table (exec costs, device count) must follow.
+        Refinement state is NOT reset here — the caller decides whether
+        the old refined assignment is still meaningful on the new fleet
+        (``DopplerTrainer.replace`` installs the re-placed one)."""
+        self.devices = devices
+        self.n_devices = int(devices.n) if hasattr(devices, "n") \
+            else int(devices)
+        self._exec_cost_cache.clear()
+
     # ------------------------------------------------------------ expand
     def expand(self, seg_assignment) -> np.ndarray:
         """Segment assignment(s) -> flat assignment(s) (batch-friendly)."""
@@ -210,7 +323,8 @@ class HierarchicalPolicy:
     # ------------------------------------------------------------ refine
     def refine(self, assignment, engine, episode: int = 0,
                rounds: int | None = None,
-               top_k: int | None = None) -> tuple[np.ndarray, float]:
+               top_k: int | None = None,
+               deadline: float | None = None) -> tuple[np.ndarray, float]:
         """Bounded intra-segment refinement of a flat assignment.
 
         Per round, two single-move families are proposed — communication
@@ -221,58 +335,29 @@ class HierarchicalPolicy:
         is then compared against the greedy combination of every
         individually-improving move (one more 2-row call).  Monotone:
         the result never scores worse than the input under ``engine``.
+        ``deadline`` (perf_counter instant) stops starting new rounds —
+        the re-placement budget hook.
         """
         eng = as_engine(engine)
         cfg = self.config
         a, t, rounds_done, moves_applied = self._refine_on(
             self.partition.flat, self.exec_cost, assignment, eng, episode,
             cfg.refine_rounds if rounds is None else rounds,
-            cfg.refine_top_k if top_k is None else top_k)
+            cfg.refine_top_k if top_k is None else top_k,
+            deadline=deadline)
         self.refine_state = RefineState(a.copy(), float(t), rounds_done,
                                         moves_applied)
         return a, float(t)
 
     def _refine_on(self, g: DataflowGraph, exec_cost, assignment, eng,
-                   episode: int, rounds: int, top_k: int
+                   episode: int, rounds: int, top_k: int,
+                   deadline: float | None = None
                    ) -> tuple[np.ndarray, float, int, int]:
         """Graph-generic refinement body (flat graph or a V-cycle level)."""
-        a = np.asarray(assignment, dtype=np.int64).copy()
-        t = float(eng.exec_times(a[None, :], episode)[0])
-        rounds_done = moves_applied = 0
-        for r in range(rounds):
-            cands, moves = propose_moves(g, a, top_k, exec_cost,
-                                         self.n_devices)
-            if not moves:
-                break
-            ts = np.asarray(eng.exec_times(cands, episode + 1 + r),
-                            dtype=float)
-            rounds_done += 1
-            order = np.argsort(ts, kind="stable")
-            if ts[order[0]] >= t:
-                break
-            # greedy combination of every individually-improving move vs
-            # the best single move (one more 2-row call)
-            combined = a.copy()
-            moved: set[int] = set()
-            for i in order.tolist():
-                v, d = moves[i]
-                if ts[i] < t and v not in moved:
-                    combined[v] = d
-                    moved.add(v)
-            pair = np.stack([combined, cands[order[0]]])
-            t2 = np.asarray(eng.exec_times(pair, episode + 101 + r),
-                            dtype=float)
-            if t2[0] <= t2[1] and t2[0] < t:
-                a, t = combined, float(t2[0])
-                moves_applied += len(moved)
-            elif t2[1] < t:
-                a, t = pair[1], float(t2[1])
-                moves_applied += 1
-            else:
-                # noisy engines can re-score the "improving" move worse;
-                # keep monotonicity and stop
-                break
-        return a, float(t), rounds_done, moves_applied
+        return refine_assignment(g, exec_cost, assignment, eng,
+                                 self.n_devices, episode=episode,
+                                 rounds=rounds, top_k=top_k,
+                                 deadline=deadline)
 
     # ------------------------------------------------------------ V-cycle
     def refine_levels(self, top_assignment, episode: int = 0,
@@ -290,8 +375,6 @@ class HierarchicalPolicy:
         its own engine, which is what keeps ``place() <= CP`` structural
         at the bottom.  Per-level timings/scores land in
         ``self.vcycle_stats``."""
-        import time as _time
-
         from .heuristics import critical_path_assignment
         from .simulator import WCSimulator
 
@@ -306,7 +389,7 @@ class HierarchicalPolicy:
             a = part.levels[lvl].expand(a)
             if not has_model:
                 continue                    # bare device count: expand only
-            t0 = _time.perf_counter()
+            t0 = time.perf_counter()
             g = part.level_graph(lvl)
             eng = as_engine(WCSimulator(g, self.devices, choose="fifo",
                                         noise_sigma=0.0))
@@ -323,7 +406,7 @@ class HierarchicalPolicy:
             self.vcycle_stats.append(
                 {"level": lvl, "n": g.n, "t_in": t_in, "t_out": t_out,
                  "rounds": rds, "moves": mvs,
-                 "seconds": _time.perf_counter() - t0})
+                 "seconds": time.perf_counter() - t0})
         return part.levels[0].expand(a)
 
     # ------------------------------------------------- checkpoint plumbing

@@ -18,6 +18,7 @@ data-parallel replicas/pods, with rewards aggregated across the fleet.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Sequence
 
@@ -27,7 +28,7 @@ import numpy as np
 
 from ..train.optim import AdamState, adamw_init, adamw_update, linear_schedule
 from .assign import GraphData, build_graph_data, rollout, rollout_batch
-from .devices import DeviceModel
+from .devices import DeviceModel, FleetEvent
 from .engine import RewardEngine, SimRewardEngine, as_engine
 from .graph import DataflowGraph
 from .heuristics import critical_path_assignment
@@ -112,6 +113,31 @@ class EpisodeRecord:
     best_so_far: float
 
 
+@dataclasses.dataclass
+class ReplaceResult:
+    """Outcome of one :meth:`DopplerTrainer.replace` call.
+
+    ``makespan_before`` is the surviving-device projection of the OLD
+    placement scored on the NEW fleet — what the system would run at if
+    it kept the stale placement; ``makespan`` is the re-placed result.
+    ``cp_makespan`` is the best CRITICAL-PATH candidate in the pool (on
+    the new fleet), so ``makespan <= cp_makespan`` is structural whenever
+    CP seeds made it into the pool."""
+    assignment: np.ndarray          # flat-graph assignment on the new fleet
+    makespan: float
+    makespan_before: float
+    cp_makespan: float
+    source: str                     # 'projected' | 'policy' | 'cp' | 'refined'
+    latency_s: float
+    budget_s: float
+    within_budget: bool
+    fleet_fingerprint: str
+    event: "FleetEvent | None" = None
+    refine_rounds: int = 0
+    refine_moves: int = 0
+    n_candidates: int = 0
+
+
 class DopplerTrainer:
     """Owns the dual-policy parameters and runs the three stages."""
 
@@ -151,6 +177,7 @@ class DopplerTrainer:
             self.hier = HierarchicalPolicy(part, hierarchy, dev)
             graph = part.seg_graph
         self.g, self.dev = graph, dev
+        self.comm_factor = comm_factor
         self.gd = build_graph_data(graph, dev, comm_factor)
         key = jax.random.PRNGKey(seed)
         self.key, pkey = jax.random.split(key)
@@ -215,6 +242,18 @@ class DopplerTrainer:
 
     def greedy_assignment(self) -> np.ndarray:
         out = rollout(self.params, self.gd, self._next_key(),
+                      jnp.float32(0.0), self._dummy_actions,
+                      jnp.array(False), greedy=True,
+                      sel_mode=self.sel_mode, plc_mode=self.plc_mode,
+                      encoder_backend=self.encoder_backend)
+        return np.asarray(out["assignment"])
+
+    def _greedy_on(self, gd: GraphData) -> np.ndarray:
+        """Greedy rollout against an arbitrary GraphData (e.g. the policy
+        graph re-featurized for a derived fleet) WITHOUT advancing the
+        trainer's PRNG state — greedy decoding is deterministic, so
+        re-placement stays replayable and side-effect-free until commit."""
+        out = rollout(self.params, gd, jax.random.fold_in(self.key, 0x5EAF),
                       jnp.float32(0.0), self._dummy_actions,
                       jnp.array(False), greedy=True,
                       sel_mode=self.sel_mode, plc_mode=self.plc_mode,
@@ -678,6 +717,153 @@ class DopplerTrainer:
         if refine:
             a, t = self.hier.refine(a, eng, episode=ep)
         return a, t
+
+    # -------------------------------------------- dynamic-fleet re-place
+    def replace(self, event: "FleetEvent | DeviceModel",
+                budget_s: float = 5.0, engine=None, cp_seeds: int = 2,
+                refine: bool = True, commit: bool = True) -> ReplaceResult:
+        """Re-place the graph after a fleet event, warm-starting from the
+        trained policy and the previous placement, under a hard
+        ``budget_s`` wall-clock contract.
+
+        ``event`` is a :class:`FleetEvent` (applied to the current fleet)
+        or a same-size replacement :class:`DeviceModel` (e.g. measured
+        post-degradation rates).  The candidate pool is:
+
+        1. the surviving-device PROJECTION of the previous placement
+           (:func:`hierarchy.project_assignment` — orphans of a lost
+           device LPT-redistributed on the new fleet),
+        2. the policy's greedy rollout against the graph RE-FEATURIZED
+           for the new fleet (fleet-agnostic params, PR 6 — no gradient
+           step needed),
+        3. CRITICAL-PATH seeds on the new fleet (the first seed is
+           unconditional, so ``makespan <= cp_makespan`` is structural;
+           extra seeds only while within budget).
+
+        All candidates are scored in ONE batched ``exec_times`` call
+        through the ``RewardEngine`` protocol, then the winner takes
+        deadline-bounded monotone refinement.  With ``commit=True`` the
+        trainer swaps to the new fleet (graph data, fused caches, reward
+        normalizer reset — old-fleet reward scale is stale) and training
+        can resume immediately; ``commit=False`` leaves the trainer
+        untouched (used by benchmarks for repeated timing)."""
+        from .hierarchy import (RefineState, project_assignment,
+                                refine_assignment)
+        t0 = time.perf_counter()
+        deadline = t0 + float(budget_s)
+        if isinstance(event, FleetEvent):
+            new_dev, smap = event.apply(self.dev)
+            ev: FleetEvent | None = event
+        elif isinstance(event, DeviceModel):
+            if event.n != self.dev.n:
+                raise ValueError(
+                    "fleet size changed: pass a FleetEvent so the "
+                    "survivor map can project the old placement")
+            new_dev, smap, ev = event, np.arange(self.dev.n), None
+        else:
+            raise TypeError(f"event must be a FleetEvent or DeviceModel, "
+                            f"got {type(event).__name__}")
+        fp = new_dev.fingerprint()
+        if engine is None:
+            # the noise-free twin's compiled plan is fleet-specific and
+            # dominates repeat latency — cache it per fingerprint (the
+            # supervisor re-places on the same degraded fleet whenever
+            # events oscillate, e.g. straggler onset/recovery)
+            cache = getattr(self, "_twin_cache", None)
+            if cache is None:
+                cache = self._twin_cache = {}
+            engine = cache.get(fp)
+            if engine is None:
+                if len(cache) >= 4:
+                    cache.pop(next(iter(cache)))
+                engine = cache[fp] = as_engine(
+                    WCSimulator(self.flat_graph, new_dev, choose="fifo",
+                                noise_sigma=0.0))
+        eng = as_engine(engine)
+        ep = self.episode
+        gd_new = build_graph_data(self.g, new_dev, self.comm_factor)
+        # 1. warm-start projection (at the POLICY graph level: segment
+        #    assignments for hierarchical trainers, flat otherwise)
+        a_prev = (np.asarray(self.best_assignment)
+                  if self.best_assignment is not None
+                  else self._greedy_on(self.gd))
+        cands = [project_assignment(self.g, new_dev, a_prev, smap)]
+        sources = ["projected"]
+        # 2. policy greedy on the re-featurized graph
+        cands.append(self._greedy_on(gd_new))
+        sources.append("policy")
+        # 3. CP seeds — first one unconditional (the <= CP gate), the
+        #    rest only while the budget allows.  CP is deterministic per
+        #    (fleet, seed), so seeds are cached by fingerprint: repeated
+        #    or oscillating events (straggler onset/recovery) skip the
+        #    O(n x devices) python heuristic entirely
+        cp_cache = getattr(self, "_cp_cache", None)
+        if cp_cache is None:
+            cp_cache = self._cp_cache = {}
+        cp_rows: list[int] = []
+        for s in range(max(int(cp_seeds), 1)):
+            if s > 0 and time.perf_counter() >= deadline:
+                break
+            a_cp = cp_cache.get((fp, s))
+            if a_cp is None:
+                if len(cp_cache) >= 16:
+                    cp_cache.pop(next(iter(cp_cache)))
+                a_cp = cp_cache[(fp, s)] = critical_path_assignment(
+                    self.g, new_dev, seed=s)
+            cp_rows.append(len(cands))
+            cands.append(a_cp)
+            sources.append("cp")
+        seg = np.stack(cands)
+        flat = self.hier.expand(seg) if self.hier is not None else seg
+        ts = np.asarray(eng.exec_times(flat, ep), dtype=float)
+        k = int(ts.argmin())
+        a, t, source = flat[k].copy(), float(ts[k]), sources[k]
+        makespan_before = float(ts[0])
+        cp_makespan = float(ts[cp_rows].min()) if cp_rows else float("inf")
+        rounds_done = moves = 0
+        if refine and time.perf_counter() < deadline:
+            gf = self.flat_graph
+            cost = (new_dev.exec_overhead_vec[None, :]
+                    + gf.flops_array()[:, None]
+                    / new_dev.flops_per_sec[None, :])
+            cost[gf.input_mask()] = 0.0
+            cfg = self.hierarchy
+            a2, t2, rounds_done, moves = refine_assignment(
+                gf, cost, a, eng, int(new_dev.n), episode=ep + 1,
+                rounds=cfg.refine_rounds if cfg is not None else 2,
+                top_k=cfg.refine_top_k if cfg is not None else 16,
+                deadline=deadline)
+            if t2 < t:
+                a, t, source = a2, float(t2), "refined"
+        latency = time.perf_counter() - t0
+        result = ReplaceResult(
+            assignment=a, makespan=t, makespan_before=makespan_before,
+            cp_makespan=cp_makespan, source=source, latency_s=latency,
+            budget_s=float(budget_s),
+            within_budget=latency <= float(budget_s),
+            fleet_fingerprint=fp, event=ev,
+            refine_rounds=rounds_done, refine_moves=moves,
+            n_candidates=len(cands))
+        if commit:
+            self.dev = new_dev
+            self.gd = gd_new
+            self._fused_cache = {}      # SimGraph/chunks were fleet-specific
+            # reward normalizer tracks the OLD fleet's makespan scale
+            self._r_sum = self._r_sqsum = 0.0
+            self._r_count = 0
+            if self.hier is not None:
+                self.hier.rebind_devices(new_dev)
+                self.hier.refine_state = RefineState(a.copy(), float(t),
+                                                     rounds_done, moves)
+                # Stage II resumes at the segment level: keep the best
+                # SEGMENT candidate (the refined flat winner has no
+                # segment-level preimage)
+                self.best_assignment = seg[k]
+                self.best_time = float(ts[k])
+            else:
+                self.best_assignment = a.copy()
+                self.best_time = float(t)
+        return result
 
     # -------------------------------------------------------- evaluation
     def evaluate(self, sim_or_fn, n_runs: int = 10,

@@ -103,6 +103,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "coarsen in a single level")
     ap.add_argument("--hier-max-levels", type=int, default=16,
                     help="hard cap on V-cycle depth")
+    ap.add_argument("--events", nargs="*", default=None,
+                    metavar="STEP:EVENT",
+                    help="dynamic-fleet schedule for Stage II, e.g. "
+                         "'40:loss:2' '60:straggler:1:0.5' "
+                         "'80:link:0:0.25' — runs Stage II under the "
+                         "fault-tolerance supervisor: device losses roll "
+                         "back to the last snapshot, re-form the fleet "
+                         "and re-place within --replace-budget; non-fatal "
+                         "events re-place inline (requires --system sim)")
+    ap.add_argument("--replace-budget", type=float, default=5.0,
+                    metavar="SECONDS",
+                    help="wall-clock budget for each re-placement")
     return ap
 
 
@@ -212,7 +224,51 @@ def main(argv=None):
     # ----------------------------------------------------------- Stage II
     if args.stage2:
         log = max(args.stage2 // 5, 1)
-        if args.engine == "serial":
+        if args.events:
+            if args.system == "executor":
+                raise SystemExit("--events requires --system sim: the "
+                                 "executor's virtual fleet cannot shrink")
+            from ..core.devices import parse_event
+            from ..train.fault_tolerance import (SupervisorConfig,
+                                                 supervise_stage2)
+            sched = {}
+            for spec in args.events:
+                step_s, _, rest = spec.partition(":")
+                sched[int(step_s)] = parse_event(rest)
+            out = supervise_stage2(
+                trainer, args.stage2, events=sched,
+                cfg=SupervisorConfig(ckpt_every=max(args.stage2 // 10, 1),
+                                     replace_budget_s=args.replace_budget),
+                batch_size=args.stage2_batch)
+            for line in out["log"]:
+                print(f"[supervisor] {line}")
+            print(f"stage II : {out['steps']} supervised updates, "
+                  f"{out['recoveries']} recoveries, "
+                  f"{len(out['replacements'])} re-placements; fleet now "
+                  f"{trainer.dev.name} ({trainer.dev.n} devices)")
+            if trainer.dev is not dev_twin:
+                # the fleet changed mid-run: every downstream engine and
+                # the CP baseline must score the SURVIVING fleet
+                dev_twin = trainer.dev
+                flat_sim = WCSimulator(g, dev_twin, choose="fifo",
+                                       noise_sigma=args.noise)
+                flat_eval = WCSimulator(g, dev_twin, choose="fifo",
+                                        noise_sigma=0.0)
+                real_eval = SimRewardEngine(
+                    WCSimulator(g, dev_twin, choose="fifo",
+                                noise_sigma=0.08))
+                stage3_engine = real_eval
+                if hier_cfg is not None:
+                    from ..core.hierarchy import ExpandingEngine
+                    stage3_engine = ExpandingEngine(trainer.hier,
+                                                    stage3_engine)
+                cp_a, cp_t = best_critical_path(
+                    g, dev_twin,
+                    lambda a: flat_sim.batch_engine.exec_time(a, seed=0),
+                    n_trials=min(cp_trials, 10))
+                print(f"post-event CP baseline on {dev_twin.name}: "
+                      f"{cp_t*1e3:.2f}ms")
+        elif args.engine == "serial":
             trainer.stage2_sim(args.stage2 * args.stage2_batch, sim,
                                log_every=log * args.stage2_batch)
         elif args.engine == "batched":

@@ -1,0 +1,338 @@
+"""Dynamic-fleet re-placement: FleetEvent model, warm-start projection,
+the ``DopplerTrainer.replace`` budget contract, and the supervisor's
+event-driven recovery loop — plus the three PR-10 bugfix regressions
+(straggler-median poisoning, history truncation on recovery, and
+``straggler_box`` capacity-through-constructor)."""
+import numpy as np
+import pytest
+from conftest import make_diamond, random_dag
+
+from repro.core.devices import (FleetEvent, parse_event, straggler_box,
+                                uniform_box)
+from repro.core.heuristics import critical_path_assignment
+from repro.core.hierarchy import HierarchyConfig, project_assignment
+from repro.core.simulator import WCSimulator
+from repro.core.training import DopplerTrainer
+from repro.train.fault_tolerance import (DeviceFailure, SupervisorConfig,
+                                         TrainSupervisor, supervise_stage2)
+
+
+# ------------------------------------------------------------ FleetEvent
+def test_device_loss_survivor_map_and_fingerprint():
+    dev = straggler_box(4)
+    new, smap = FleetEvent.device_loss(2).apply(dev)
+    assert new.n == 3
+    np.testing.assert_array_equal(smap, [0, 1, -1, 2])
+    # surviving rates keep their values, re-indexed
+    np.testing.assert_allclose(new.flops_per_sec,
+                               dev.flops_per_sec[[0, 1, 3]])
+    assert new.link_bw.shape == (3, 3)
+    assert new.fingerprint() != dev.fingerprint()
+
+
+def test_straggler_onset_recovery_roundtrip():
+    dev = uniform_box(4)
+    d1, smap = FleetEvent.straggler_onset(1, 0.5).apply(dev)
+    np.testing.assert_array_equal(smap, np.arange(4))
+    assert d1.flops_per_sec[1] == pytest.approx(dev.flops_per_sec[1] * 0.5)
+    assert d1.fingerprint() != dev.fingerprint()
+    d2, _ = FleetEvent.straggler_recovery(1, 0.5).apply(d1)
+    np.testing.assert_allclose(d2.flops_per_sec, dev.flops_per_sec)
+    assert d2.fingerprint() == dev.fingerprint()
+
+
+def test_link_degradation_all_and_single():
+    dev = uniform_box(4)
+    d_all, _ = FleetEvent.link_degradation(0, factor=0.25).apply(dev)
+    off = np.arange(4) != 0
+    np.testing.assert_allclose(d_all.link_bw[0, off],
+                               dev.link_bw[0, off] * 0.25)
+    np.testing.assert_allclose(d_all.link_bw[off, 0],
+                               dev.link_bw[off, 0] * 0.25)
+    assert np.isinf(d_all.link_bw[0, 0])          # diagonal stays local
+    d_one, _ = FleetEvent.link_degradation(1, dst=2, factor=0.5).apply(dev)
+    assert d_one.link_bw[1, 2] == pytest.approx(dev.link_bw[1, 2] * 0.5)
+    assert d_one.link_bw[2, 1] == pytest.approx(dev.link_bw[2, 1])
+
+
+def test_event_validation_and_parse():
+    with pytest.raises(ValueError):
+        FleetEvent("meteor_strike")
+    with pytest.raises(ValueError):
+        FleetEvent.device_loss(7).apply(uniform_box(4))
+    ev = parse_event("loss:2")
+    assert ev.kind == "device_loss" and ev.device == 2
+    ev = parse_event("straggler:1:0.4")
+    assert ev.kind == "straggler_onset" and ev.factor == 0.4
+    ev = parse_event("link:0:0.25:3")
+    assert ev.kind == "link_degradation" and ev.dst == 3
+    with pytest.raises(ValueError):
+        parse_event("loss")
+
+
+# ----------------------------------------- satellite 3: straggler_box fix
+def test_straggler_box_capacity_through_constructor():
+    dev = straggler_box(4, mem_bytes=16e9)
+    assert dev.mem_bytes is not None
+    np.testing.assert_allclose(dev.mem_bytes, np.full(4, 16e9))
+    # capacity is part of the constructed state => part of the hash
+    assert (straggler_box(4, mem_bytes=8e9).fingerprint()
+            != dev.fingerprint())
+    # and the default fleet is deterministic
+    assert straggler_box(4).fingerprint() == dev.fingerprint()
+
+
+# ------------------------------------------------------------- projection
+def test_projection_no_vertex_on_dead_device():
+    rng = np.random.default_rng(3)
+    g = random_dag(rng, 40)
+    dev = uniform_box(4)
+    a = rng.integers(0, 4, g.n)
+    new, smap = FleetEvent.device_loss(1).apply(dev)
+    out = project_assignment(g, new, a, smap)
+    assert out.min() >= 0 and out.max() < 3
+    # survivors keep their (re-indexed) device
+    kept = a != 1
+    np.testing.assert_array_equal(out[kept], smap[a[kept]])
+
+
+def test_projection_identity_without_loss():
+    rng = np.random.default_rng(4)
+    g = random_dag(rng, 20)
+    dev = uniform_box(4)
+    a = rng.integers(0, 4, g.n)
+    out = project_assignment(g, dev, a, np.arange(4))
+    np.testing.assert_array_equal(out, a)
+
+
+def test_projection_rejects_out_of_range_assignment():
+    rng = np.random.default_rng(5)
+    g = random_dag(rng, 10)
+    with pytest.raises(ValueError):
+        project_assignment(g, uniform_box(3), np.full(g.n, 5),
+                           np.arange(3))
+
+
+# ------------------------------------------------------------- replace()
+@pytest.fixture(scope="module")
+def trained_flat():
+    rng = np.random.default_rng(0)
+    g = random_dag(rng, 32)
+    tr = DopplerTrainer(g, uniform_box(4), seed=0)
+    tr.stage2_sim_batched(3, batch_size=4)
+    return tr
+
+
+def test_replace_beats_cp_and_respects_loss(trained_flat):
+    tr = trained_flat
+    res = tr.replace(FleetEvent.device_loss(3), budget_s=10.0,
+                     commit=False)
+    assert res.assignment.max() < 3
+    assert res.makespan <= res.cp_makespan + 1e-9
+    assert res.makespan <= res.makespan_before + 1e-9
+    assert res.within_budget
+    assert res.n_candidates >= 3
+    # commit=False left the trainer on the original fleet
+    assert tr.dev.n == 4
+
+
+def test_replace_budget_contract(trained_flat):
+    # a tiny budget still returns a valid placement (the structural CP
+    # seed + one batched score always run; refinement rounds are what
+    # the deadline cuts) and still meets the <= CP gate
+    res = trained_flat.replace(FleetEvent.device_loss(0),
+                               budget_s=1e-6, commit=False)
+    assert res.makespan <= res.cp_makespan + 1e-9
+    assert len(res.assignment) == trained_flat.flat_graph.n
+    assert res.refine_rounds == 0           # no time for refinement
+    assert not res.within_budget            # and the result says so
+
+
+def test_replace_commit_swaps_fleet_and_training_resumes():
+    rng = np.random.default_rng(1)
+    g = random_dag(rng, 28)
+    tr = DopplerTrainer(g, uniform_box(4), seed=0)
+    tr.stage2_sim_batched(2, batch_size=4)
+    res = tr.replace(FleetEvent.straggler_onset(2, 0.4), budget_s=10.0)
+    assert tr.dev.fingerprint() == res.fleet_fingerprint
+    assert tr.gd is not None
+    assert tr._r_count == 0                 # reward scale reset
+    np.testing.assert_array_equal(tr.best_assignment, res.assignment)
+    tr.stage2_sim_batched(2, batch_size=4)  # resumes on the new fleet
+    assert tr.episode == 2 * 4 + 2 * 4
+
+
+def test_replace_hierarchical_expands_and_commits():
+    rng = np.random.default_rng(2)
+    g = random_dag(rng, 90, p_edge=0.08)
+    tr = DopplerTrainer(g, uniform_box(4), seed=0,
+                        hierarchy=HierarchyConfig(n_segments=12))
+    tr.stage2_sim_batched(2, batch_size=4)
+    res = tr.replace(FleetEvent.device_loss(1), budget_s=10.0)
+    assert len(res.assignment) == g.n and res.assignment.max() < 3
+    assert res.makespan <= res.cp_makespan + 1e-9
+    # trainer keeps a SEGMENT-level best for Stage-II resumption
+    assert len(tr.best_assignment) == tr.g.n
+    assert tr.hier.n_devices == 3
+    tr.stage2_sim_batched(1, batch_size=4)
+    a, t = tr.place()
+    assert a.max() < 3 and np.isfinite(t)
+
+
+def test_replace_rejects_resized_plain_model(trained_flat):
+    with pytest.raises(ValueError):
+        trained_flat.replace(uniform_box(3), commit=False)
+    with pytest.raises(TypeError):
+        trained_flat.replace("loss:1", commit=False)
+
+
+# ----------------------------------------------- supervisor (faked deps)
+def _mini_supervisor(schedule, cfg=None, slow_steps=(),
+                     replacer=None, n_devices=4):
+    """TrainSupervisor over trivial faked collaborators; ``slow_steps``
+    lists step indices whose step_fn sleeps (genuine stragglers)."""
+    import time as _t
+
+    ckpts = {}
+
+    class Stream:
+        def __init__(self):
+            self.cursor = 0
+            self.skips = []
+
+        def next_batch(self):
+            self.cursor += 1
+            return self.cursor - 1
+
+        def state(self):
+            return {"cursor": self.cursor}
+
+        def restore(self, st):
+            self.cursor = st["cursor"]
+
+        def skip_ahead(self, step):
+            self.skips.append(step)
+            d = max(0, step - self.cursor)
+            self.cursor = max(self.cursor, step)
+            return d
+
+    stream = Stream()
+    sup = TrainSupervisor(
+        cfg or SupervisorConfig(ckpt_every=2, max_recoveries=5),
+        make_state=lambda mesh: 0,
+        step_fn=lambda s, b, step: (
+            _t.sleep(0.04 if step in slow_steps else 0.004) or (s + 1, step)),
+        make_mesh=lambda nf: f"mesh-{nf}",
+        save=lambda step, state, extra=None: ckpts.__setitem__(
+            step, (state, extra)),
+        restore=lambda step, mesh: ckpts[step],
+        data=stream, failure_schedule=schedule, replacer=replacer)
+    return sup, stream
+
+
+# --------------------------- satellite 1: straggle must not poison median
+def test_injected_straggles_do_not_poison_median():
+    # steps 0-2 establish a fast (~4ms) baseline; steps 3-6 are injected
+    # straggles whose sleep lands INSIDE the timed region; step 7 is a
+    # GENUINE straggler (~40ms).  Pre-fix, the four inflated dts entered
+    # the median window (4 of 7 entries by step 7), tripling the
+    # detection threshold past 40ms and masking the genuine straggler;
+    # post-fix injected/flagged steps are excluded from the baseline.
+    sup, stream = _mini_supervisor(
+        {3: "straggle", 4: "straggle", 5: "straggle", 6: "straggle"},
+        slow_steps=(7,))
+    out = sup.run(10)
+    assert out["steps"] == 10
+    stragglers = [l for l in out["log"] if l.startswith("straggler@7")]
+    assert stragglers, f"genuine straggler at step 7 undetected: {out['log']}"
+    # injected and flagged steps are tainted; the clean median stays fast
+    assert all(sup.tainted[3:8])
+    clean = [dt for dt, bad in zip(sup.step_times, sup.tainted) if not bad]
+    assert np.median(clean) < 0.02
+
+
+# --------------------------- satellite 2: history truncation on recovery
+def test_history_truncated_after_mid_run_failure():
+    sup, _ = _mini_supervisor({7: "device", 13: "device"})
+    out = sup.run(20)
+    assert out["steps"] == 20
+    assert out["recoveries"] == 2
+    # pre-fix, replayed steps 7.. were double-counted after each rollback
+    assert len(out["metrics"]) == 20
+    assert len(sup.step_times) == 20
+    assert len(sup.tainted) == 20
+    # each step's metric is its own step index => no stale/dup entries
+    assert out["metrics"] == list(range(20))
+
+
+def test_history_cleared_on_restart_from_scratch():
+    # failure BEFORE the first checkpoint (ckpt_every large): the
+    # restart-from-scratch branch must drop stale history too
+    sup, _ = _mini_supervisor(
+        {0: "device"}, cfg=SupervisorConfig(ckpt_every=100,
+                                            max_recoveries=5))
+    out = sup.run(6)
+    assert out["steps"] == 6
+    assert len(out["metrics"]) == 6
+    assert out["metrics"] == list(range(6))
+
+
+# ------------------------------------------- supervisor x fleet events
+def test_supervisor_event_schedule_recovers_and_replaces():
+    calls = []
+
+    class FakeResult:
+        makespan_before, makespan = 2.0, 1.0
+        latency_s, within_budget = 0.01, True
+
+    def replacer(event, step):
+        calls.append((event.kind, step))
+        return FakeResult()
+
+    sup, _ = _mini_supervisor(
+        {5: FleetEvent.device_loss(3),
+         9: FleetEvent.straggler_onset(1, 0.5)}, replacer=replacer)
+    out = sup.run(14)
+    assert out["steps"] == 14
+    assert out["recoveries"] == 1             # only the loss is fatal
+    assert len(out["replacements"]) == 2
+    assert ("device_loss", 5) in calls
+    assert any(l.startswith("replace@") and "device_loss" in l
+               for l in out["log"])
+    assert any("straggler_onset" in l for l in out["log"])
+    assert len(out["metrics"]) == 14          # continuity after rollback
+
+
+def test_supervise_stage2_end_to_end():
+    rng = np.random.default_rng(6)
+    g = random_dag(rng, 24)
+    tr = DopplerTrainer(g, uniform_box(4), seed=0)
+    out = supervise_stage2(
+        tr, 8, events={3: FleetEvent.device_loss(3)},
+        cfg=SupervisorConfig(ckpt_every=2, replace_budget_s=10.0),
+        batch_size=4)
+    assert out["steps"] == 8
+    assert out["recoveries"] == 1
+    assert len(out["metrics"]) == 8
+    assert len(out["replacements"]) == 1
+    res = out["replacements"][0]
+    assert res.makespan <= res.cp_makespan + 1e-9
+    assert res.within_budget
+    assert tr.dev.n == 3                      # training resumed on 3 devs
+    assert tr.best_assignment.max() < 3
+    assert any(l.startswith("replace@") for l in out["log"])
+
+
+def test_supervisor_legacy_schedule_unchanged():
+    # the PR-8-era string schedule keeps working without a replacer
+    sup, _ = _mini_supervisor({2: "device"})
+    out = sup.run(6)
+    assert out["recoveries"] == 1 and out["steps"] == 6
+    assert out["replacements"] == []
+
+
+def test_supervisor_event_without_replacer_is_logged():
+    sup, _ = _mini_supervisor({2: FleetEvent.straggler_onset(0, 0.5)})
+    out = sup.run(5)
+    assert out["steps"] == 5
+    assert any("no replacer wired" in l for l in out["log"])

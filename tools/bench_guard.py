@@ -8,7 +8,7 @@ problems (missing/corrupt JSON), which indicate the benchmark itself
 broke.  ``--strict`` upgrades regressions to a non-zero exit for hosts
 with stable clocks.
 
-Three checks run:
+Five checks run:
 
 1. **Baseline rates** — every rate-style metric (``upd_per_sec``,
    ``eps_per_sec``, ...) in the baseline must be within ``tolerance`` of
@@ -36,6 +36,11 @@ Three checks run:
    scale; a big-graph row dropping below the smallest graph's rate
    means coarsening stopped containing the rollout cost.  Warn-only,
    like the rest.
+5. **Dynamic-fleet latency (intra-run)** — every ``dyn/*`` row's
+   warm-start re-place p50 must stay below that row's cold-retrain
+   anchor (``retrain_ms``).  Re-placement exists to be far cheaper than
+   retraining after a fleet event; losing that edge means the warm-start
+   path degenerated.  Warn-only.
 
 The verdict (``ok`` | ``regression`` plus the warning list) is written
 back into the fresh BENCH JSON under a top-level ``guard`` key, so the
@@ -176,6 +181,29 @@ def check_hier(current: dict[str, dict], tolerance: float) -> list[str]:
     return warnings
 
 
+def check_dyn(current: dict[str, dict], tolerance: float) -> list[str]:
+    """Check 5: dynamic-fleet rows — warm-start re-place p50 must stay
+    below the same row's cold-retrain anchor, within the fresh run only
+    (host-relative).  Re-placement's whole contract is being much cheaper
+    than retraining; a row where it is not means the warm-start path
+    degenerated into a retrain.  Warn-only, like the rest."""
+    warnings = []
+    for name in sorted(current):
+        if not name.startswith("dyn/") or name == "dyn/summary":
+            continue
+        d = current[name]
+        p50 = d.get("replace_p50_ms")
+        retrain = d.get("retrain_ms")
+        if p50 is None or retrain is None:
+            continue
+        if float(p50) >= float(retrain):
+            warnings.append(
+                f"{name}: warm-start re-place p50 {float(p50):.1f}ms is "
+                f"not below the cold-retrain anchor {float(retrain):.0f}ms "
+                f"— re-placement lost its latency advantage")
+    return warnings
+
+
 def record_verdict(path: str, doc: dict, verdict: str,
                    warnings: list[str], tolerance: float,
                    baseline_path: str, checked: int) -> None:
@@ -212,7 +240,8 @@ def main(argv: list[str] | None = None) -> int:
 
     warnings = (compare(current, baseline, args.tolerance)
                 + check_scaling(current, args.tolerance)
-                + check_hier(current, args.tolerance))
+                + check_hier(current, args.tolerance)
+                + check_dyn(current, args.tolerance))
     verdict = "regression" if warnings else "ok"
     record_verdict(args.current, cur_doc, verdict, warnings,
                    args.tolerance, args.baseline, len(baseline))
